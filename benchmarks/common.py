@@ -1,0 +1,76 @@
+"""Shared plumbing for the paper-table benchmarks."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.microbench import (MachineBench, app_benchmark_runtime,
+                                   simulate_microbench)
+from repro.core.predictor import BaselinePredictor, LotaruPredictor
+from repro.sched.cluster import LOCAL, PAPER_MACHINES, TARGET_MACHINES
+from repro.workflow.generator import (GroundTruth, WORKFLOW_TASKS, WORKFLOWS,
+                                      build_workflow)
+from repro.workflow.profiling import local_profiling
+
+METHODS = ("naive", "online-m", "online-p", "lotaru-g", "lotaru-a")
+ALL_METHODS = METHODS + ("lotaru-w",)
+
+
+@dataclass
+class Experiment:
+    workflow: str
+    training_set: int
+    gt: GroundTruth
+    dag: object
+    traces: list
+    profiling_s: float
+    predictors: Dict[str, object]
+    benches: Dict[str, MachineBench]
+
+
+def node_bench(name: str, seed: int = 1) -> MachineBench:
+    return simulate_microbench(PAPER_MACHINES[name], seed=seed)
+
+
+def build_experiment(workflow: str, training_set: int = 0, seed: int = 0,
+                     methods=ALL_METHODS) -> Experiment:
+    gt = GroundTruth(workflow, seed=seed)
+    traces, prof_s = local_profiling(workflow, gt, training_set=training_set)
+    local_bench = simulate_microbench(LOCAL, seed=1)
+    benches = {n.name: simulate_microbench(n, seed=1) for n in TARGET_MACHINES}
+    benches[LOCAL.name] = local_bench
+    app_bench = {}
+    for m in WORKFLOW_TASKS[workflow]:
+        b = {"local": app_benchmark_runtime(m.cpu_frac, LOCAL, LOCAL)}
+        for n in TARGET_MACHINES:
+            b[n.name] = app_benchmark_runtime(m.cpu_frac, n, LOCAL)
+        app_bench[m.name] = b
+    preds: Dict[str, object] = {}
+    for meth in methods:
+        if meth == "lotaru-g":
+            preds[meth] = LotaruPredictor("G", local_bench=local_bench).fit(traces)
+        elif meth == "lotaru-a":
+            preds[meth] = LotaruPredictor("A", local_bench=local_bench,
+                                          app_bench=app_bench).fit(traces)
+        elif meth == "lotaru-w":
+            preds[meth] = LotaruPredictor("W", local_bench=local_bench).fit(traces)
+        else:
+            preds[meth] = BaselinePredictor(meth).fit(traces)
+    return Experiment(workflow, training_set, gt, build_workflow(workflow, seed),
+                      traces, prof_s, preds, benches)
+
+
+def fmt_table(headers: List[str], rows: List[List[str]], title: str = "") -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return " | ".join(str(c).rjust(w) for c, w in zip(cells, widths))
+    out = []
+    if title:
+        out.append(title)
+    out.append(line(headers))
+    out.append("-+-".join("-" * w for w in widths))
+    out.extend(line(r) for r in rows)
+    return "\n".join(out)

@@ -1,0 +1,76 @@
+"""Evaluation A (Figs. 5-6, Table 5): prediction error, homogeneous and
+heterogeneous.  Paper claims checked:
+  * homogeneous: Lotaru MPE ~7% < Online-M/P ~11% << Naive ~69%
+  * heterogeneous: Lotaru-A < Lotaru-G << Online-P/M << Naive; Lotaru-A
+    median ~15%; >=12.5% absolute error reduction vs best baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import ALL_METHODS, build_experiment, fmt_table
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+from repro.workflow.generator import WORKFLOWS
+
+
+def _errors(exp, nodes, per_machine: Dict[str, Dict[str, list]]):
+    for node in nodes:
+        bench = exp.benches[node.name]
+        for uid, t in exp.dag.tasks.items():
+            actual = exp.gt.runtime(t.task_name, t.input_gb, node, uid)
+            for meth, pred in exp.predictors.items():
+                mean = pred.predict(t.task_name, t.input_gb, bench)[0]
+                err = abs(mean - actual) / actual
+                per_machine.setdefault(meth, {}).setdefault(node.name, []).append(err)
+
+
+def run(training_sets=(0, 1), seed: int = 0, quiet: bool = False) -> dict:
+    het: Dict[str, Dict[str, list]] = {}
+    hom: Dict[str, Dict[str, list]] = {}
+    for wf in WORKFLOWS:
+        for ts in training_sets:
+            exp = build_experiment(wf, training_set=ts, seed=seed)
+            _errors(exp, TARGET_MACHINES, het)
+            _errors(exp, [LOCAL], hom)
+
+    def mpe(d):
+        return {m: {n: 100 * float(np.median(v)) for n, v in per.items()}
+                for m, per in d.items()}
+
+    het_m, hom_m = mpe(het), mpe(hom)
+    overall = {m: 100 * float(np.median(np.concatenate(
+        [np.asarray(v) for v in per.values()]))) for m, per in het.items()}
+    hom_overall = {m: 100 * float(np.median(np.concatenate(
+        [np.asarray(v) for v in per.values()]))) for m, per in hom.items()}
+
+    rows = []
+    for node in [n.name for n in TARGET_MACHINES] + ["median"]:
+        row = [node]
+        for meth in ALL_METHODS:
+            v = overall[meth] if node == "median" else het_m[meth][node]
+            row.append(f"{v:.2f}%")
+        rows.append(row)
+    table = fmt_table(["machine"] + list(ALL_METHODS), rows,
+                      "Table 5 - heterogeneous median prediction error")
+    hom_row = fmt_table(["scenario"] + list(ALL_METHODS),
+                        [["homogeneous"] + [f"{hom_overall[m]:.2f}%"
+                                            for m in ALL_METHODS]],
+                        "Fig. 5 - homogeneous MPE")
+    if not quiet:
+        print(table)
+        print()
+        print(hom_row)
+        best_base = min(overall["online-m"], overall["online-p"], overall["naive"])
+        red = best_base - overall["lotaru-a"]
+        print(f"\n[claim] error reduction vs best baseline: {red:.1f} points "
+              f"(paper: >12.5) -> {'PASS' if red > 12.5 else 'FAIL'}")
+        print(f"[claim] ordering lotaru-a <= lotaru-g < online < naive -> "
+              f"{'PASS' if overall['lotaru-a'] <= overall['lotaru-g'] < min(overall['online-m'], overall['online-p']) < overall['naive'] else 'FAIL'}")
+    return {"heterogeneous_mpe": het_m, "heterogeneous_overall": overall,
+            "homogeneous_overall": hom_overall}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-(arch x
+shape x mesh) three-term table (EXPERIMENTS.md section Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import fmt_table
+
+
+def load(out_dir: str = "results/dryrun", tag: str = "") -> List[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(out_dir: str = "results/dryrun", quiet: bool = False,
+        tag: str = "") -> dict:
+    recs = load(out_dir, tag)
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{rl['t_compute']*1e3:.2f}",
+            f"{rl['t_memory']*1e3:.2f}",
+            f"{rl['t_collective']*1e3:.2f}",
+            rl["bottleneck"],
+            f"{rl['roofline_fraction']*100:.1f}%",
+            f"{rl['useful_flops_ratio']:.2f}",
+            "yes" if r.get("fits_hbm", True) else "NO",
+        ])
+    table = fmt_table(
+        ["arch", "shape", "mesh", "t_comp ms", "t_mem ms", "t_coll ms",
+         "bottleneck", "roofline%", "useful", "fits"],
+        rows, f"Roofline terms per cell ({len(recs)} cells)")
+    if not quiet:
+        print(table)
+    return {"cells": len(recs)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (200 scheduling clusters)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks import (carbon, cost, prediction_error, profiling_time,
+                            roofline_report, scheduling_makespan)
+    jobs = {
+        "prediction_error": lambda: prediction_error.run(),
+        "profiling_time": lambda: profiling_time.run(),
+        "scheduling_makespan": lambda: scheduling_makespan.run(
+            n_clusters=200 if args.full else 60),
+        "carbon": lambda: carbon.run(),
+        "cost": lambda: cost.run(),
+        "roofline": lambda: roofline_report.run(),
+    }
+    failures = 0
+    for name, fn in jobs.items():
+        if args.only and name != args.only:
+            continue
+        print("=" * 78)
+        print(f"== {name}")
+        print("=" * 78)
+        t0 = time.time()
+        try:
+            res = fn()
+            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            print(f"[{name}] done in {time.time()-t0:.1f}s\n")
+        except Exception as e:
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"[{name}] FAILED\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: batched prefill + KV-cache decode across several
+architectures (GQA ring-cache, MLA compressed cache, recurrent state), with
+Lotaru forecasting the next-token latency from the measured prefix.
+
+  PYTHONPATH=src python examples/serve_decode.py [--archs smollm-360m,...]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs",
+                    default="smollm-360m,mixtral-8x7b,recurrentgemma-9b,xlstm-125m")
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    for arch in args.archs.split(","):
+        print(f"\n== serving {arch} (reduced config) ==")
+        serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "24", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

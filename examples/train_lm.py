@@ -1,0 +1,38 @@
+"""End-to-end training example: a ~100M-class LM (smollm-360m family,
+depth-reduced for the CPU container) trained for a few hundred steps with
+the full production loop — Lotaru step-time profiling, Young-Daly checkpoint
+interval, atomic checkpoints, auto-resume.
+
+On a real TPU slice the same driver trains the full config:
+  python -m repro.launch.train --arch smollm-360m --steps 500 ...
+
+CPU-container scale (reduced config, ~0.25M params, visible loss curve):
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the real 360M config (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--ckpt-dir", args.ckpt_dir, "--log-every", "20"]
+    if not args.full_config:
+        argv.append("--reduced")
+    losses = train_main(argv)
+    drop = losses[0] - losses[-1]
+    print(f"loss improvement over {args.steps} steps: {drop:.3f} "
+          f"({'LEARNING' if drop > 0.1 else 'check hyperparameters'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config(arch)``, shapes, and the 40-cell matrix."""
+from __future__ import annotations
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, SMOKE_SHAPES, replace,
+    ATTN_FULL, ATTN_SWA, ATTN_LOCAL, ATTN_MLA,
+    BLK_RGLRU, BLK_MLSTM, BLK_SLSTM,
+)
+
+from repro.configs import (
+    glm4_9b, starcoder2_15b, smollm_360m, yi_6b, musicgen_large,
+    recurrentgemma_9b, mixtral_8x7b, deepseek_v2_236b, xlstm_125m, qwen2_vl_7b,
+)
+
+_MODULES = {
+    "glm4-9b": glm4_9b,
+    "starcoder2-15b": starcoder2_15b,
+    "smollm-360m": smollm_360m,
+    "yi-6b": yi_6b,
+    "musicgen-large": musicgen_large,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "xlstm-125m": xlstm_125m,
+    "qwen2-vl-7b": qwen2_vl_7b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return _MODULES[arch].CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].REDUCED
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention; skip for pure full-attention
+    archs (documented in DESIGN.md §4)."""
+    if shape == "long_500k":
+        return get_config(arch).sub_quadratic or arch == "mixtral-8x7b"
+    return True
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) cells; applicable() marks long_500k skips."""
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape, cell_applicable(arch, shape)

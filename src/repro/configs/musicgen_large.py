@@ -1,0 +1,44 @@
+"""MusicGen-large [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+Backbone only: the EnCodec frontend is a STUB — ``input_specs()`` provides
+precomputed frame embeddings (B, S, d_model).  Cross-attention consumes
+precomputed text-conditioning embeddings (T5 stub).
+"""
+from repro.configs.base import ModelConfig, ATTN_FULL
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,           # MHA (kv=32)
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,           # EnCodec codebook size
+    block_pattern=(ATTN_FULL,),
+    ffn_kind="gelu",
+    cross_attn=True,
+    num_cond_tokens=128,       # T5 conditioning sequence (stubbed embeddings)
+    frontend="audio_frames",
+    rope_theta=10000.0,
+    fsdp=True,
+    remat="dots",
+)
+
+REDUCED = ModelConfig(
+    name="musicgen-large-reduced",
+    family="audio",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=128,
+    block_pattern=(ATTN_FULL,),
+    ffn_kind="gelu",
+    cross_attn=True,
+    num_cond_tokens=8,
+    frontend="audio_frames",
+)

@@ -1,0 +1,46 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — M-RoPE, dynamic-resolution VLM backbone.
+
+Backbone transformer only: the vision tower is a STUB — ``input_specs()``
+provides precomputed patch embeddings (B, V, d_model) that are scattered
+into the token stream; M-RoPE applies 3-section rotary (temporal, h, w)
+with sections (16, 24, 24) over head_dim/2 = 64.
+"""
+from repro.configs.base import ModelConfig, ATTN_FULL
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    block_pattern=(ATTN_FULL,),
+    ffn_kind="swiglu",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1000000.0,
+    frontend="vision_patches",
+    num_vision_tokens=1024,
+    pad_heads_multiple=16,   # 28 -> 32 zero-padded heads (exact; DESIGN.md)
+    fsdp=True,
+    remat="dots",
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-vl-7b-reduced",
+    family="vlm",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    block_pattern=(ATTN_FULL,),
+    ffn_kind="swiglu",
+    mrope_sections=(4, 6, 6),
+    frontend="vision_patches",
+    num_vision_tokens=8,
+)

@@ -1,0 +1,41 @@
+"""Pearson correlation gate (Section 4.5): |r| >= 0.75 -> linear model,
+otherwise the task runtime is treated as input-independent (median)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+STRONG_CORRELATION = 0.75
+
+
+def pearson(x: jnp.ndarray, y: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    m = jnp.ones_like(x) if mask is None else jnp.asarray(mask, jnp.float32)
+    n = jnp.maximum(m.sum(), 1.0)
+    xm = (x * m).sum() / n
+    ym = (y * m).sum() / n
+    xc = (x - xm) * m
+    yc = (y - ym) * m
+    cov = (xc * yc).sum()
+    vx = (xc * xc).sum()
+    vy = (yc * yc).sum()
+    return cov / jnp.sqrt(jnp.maximum(vx * vy, 1e-18))
+
+
+def strongly_correlated(x, y, mask=None,
+                        threshold: float = STRONG_CORRELATION) -> jnp.ndarray:
+    return jnp.abs(pearson(x, y, mask)) >= threshold
+
+
+def masked_median(v: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    if mask is None:
+        return jnp.median(v)
+    big = jnp.where(mask > 0, v, jnp.inf)
+    order = jnp.sort(big)
+    n = mask.sum().astype(jnp.int32)
+    lo = jnp.maximum((n - 1) // 2, 0)
+    hi = n // 2
+    return 0.5 * (order[lo] + order[hi])

@@ -1,0 +1,126 @@
+"""Infrastructure profiling (Sections 4.3, 5.1).
+
+Two layers:
+  * `run_local_microbench()` — REAL measurements of the machine this code
+    runs on, via JAX compute probes and file I/O (the 'scientist's local
+    computer' role; the only wall-clock measurement in the whole system).
+  * `simulate_microbench(spec)` — deterministic noisy benchmark readings for
+    modeled cluster nodes (the six Table-2 machines and the TPU fleet),
+    since the paper's physical clusters are unavailable offline.
+
+Application-specific benchmarks (Section 5.2) are modeled as running a
+reference task on a reference input on each node (Docker-container
+analogue): `app_benchmark_runtime`.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.extrapolation import MachineBench
+
+
+# ---------------------------------------------------------------------------
+# real local probes
+# ---------------------------------------------------------------------------
+def _time_it(fn, repeats: int = 3) -> float:
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def cpu_probe_gflops(n: int = 512) -> float:
+    """matmul throughput, single device (sysbench-CPU analogue)."""
+    import jax
+    import jax.numpy as jnp
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda x: x @ x)
+    dt = _time_it(lambda: jax.block_until_ready(f(a)))
+    return 2 * n ** 3 / dt / 1e9
+
+
+def mem_probe_gbps(n: int = 1 << 22) -> float:
+    """stream-copy bandwidth (sysbench-memory analogue)."""
+    import jax
+    import jax.numpy as jnp
+    a = jnp.ones((n,), jnp.float32)
+    f = jax.jit(lambda x: x * 1.0000001 + 1.0)
+    dt = _time_it(lambda: jax.block_until_ready(f(a)))
+    return 3 * 4 * n / dt / 1e9
+
+
+def io_probe_mbps(size_mb: int = 64) -> Dict[str, float]:
+    """sequential write/read (fio analogue)."""
+    buf = os.urandom(size_mb << 20)
+    with tempfile.NamedTemporaryFile(delete=False) as f:
+        path = f.name
+    try:
+        t0 = time.perf_counter()
+        with open(path, "wb") as f:
+            f.write(buf)
+            f.flush()
+            os.fsync(f.fileno())
+        w = size_mb / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with open(path, "rb") as f:
+            f.read()
+        r = size_mb / (time.perf_counter() - t0)
+    finally:
+        os.unlink(path)
+    return {"read": r, "write": w}
+
+
+def run_local_microbench(name: str = "local-real") -> MachineBench:
+    io = io_probe_mbps()
+    return MachineBench(name=name, cpu=cpu_probe_gflops(),
+                        mem=mem_probe_gbps(),
+                        io_read=io["read"], io_write=io["write"])
+
+
+# ---------------------------------------------------------------------------
+# simulated node benchmarks
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class NodeSpec:
+    """Ground-truth capability of a modeled node (hidden from predictors;
+    microbenchmarks observe it with noise, exactly as real benchmarks do)."""
+    name: str
+    cpu: float
+    mem: float
+    io_read: float
+    io_write: float
+    cores: int = 8
+    power_watts: float = 200.0
+    price_per_hour: float = 0.38
+    net_gbps: float = 1.0
+
+
+def simulate_microbench(spec: NodeSpec, seed: int = 0,
+                        noise: float = 0.03) -> MachineBench:
+    rng = np.random.default_rng(abs(hash((spec.name, seed))) % (2 ** 31))
+    jitter = lambda v: float(v * rng.lognormal(0.0, noise))
+    return MachineBench(name=spec.name, cpu=jitter(spec.cpu),
+                        mem=jitter(spec.mem),
+                        io_read=jitter(spec.io_read),
+                        io_write=jitter(spec.io_write))
+
+
+def app_benchmark_runtime(task_cpu_frac: float, spec: NodeSpec,
+                          ref_spec: NodeSpec, base_runtime: float = 30.0,
+                          seed: int = 0, noise: float = 0.02) -> float:
+    """Application-specific benchmark (Section 5.2): run the task's container
+    on a small reference input on `spec`; returns the measured runtime."""
+    rng = np.random.default_rng(abs(hash((spec.name, "app", seed))) % (2 ** 31))
+    t = base_runtime * (task_cpu_frac * ref_spec.cpu / spec.cpu
+                        + (1 - task_cpu_frac) * (ref_spec.io_read + ref_spec.io_write)
+                        / (spec.io_read + spec.io_write))
+    return float(t * rng.lognormal(0.0, noise))

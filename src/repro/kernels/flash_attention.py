@@ -1,0 +1,127 @@
+"""Flash attention for TPU (pl.pallas_call + explicit BlockSpec VMEM tiling).
+
+Grid (B, H, n_q_blocks, n_kv_blocks); the last grid dim iterates
+sequentially on a TPU core, so the online-softmax state (m, l, acc) lives in
+VMEM scratch across kv blocks.  GQA is handled in the *index map* — the kv
+BlockSpec maps query head h to kv head h*K//H, so grouped KV is never
+materialized (the TPU-native answer to the GPU kernel's shared-memory
+broadcast).  Causal and sliding-window masks are applied per block, and
+`@pl.when` skips fully-masked kv blocks.
+
+Block sizes default to (128, 128): MXU-aligned (multiples of 128 on both
+matmul dims), and the working set
+  q (128,hd) + k,v (128,hd)*2 + acc (128,hd) + scores (128,128)
+stays well under ~1 MB of VMEM for hd <= 256.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_kv: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * block_q
+    k_lo = jk * block_k
+
+    # is any (q, k) pair in this block pair visible?
+    needed = jnp.bool_(True)
+    if causal:
+        needed = k_lo <= q_lo + block_q - 1
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(jk == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) with H % K == 0 (GQA).
+    Returns (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    n_q, n_kv = sq // block_q, skv // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    qt = jnp.moveaxis(q, 2, 1)       # (B, H, Sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)       # (B, K, Skv, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    group = h // kh
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda bb, hh, i, j: (bb, hh, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda bb, hh, i, j: (bb, hh // group, j, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda bb, hh, i, j: (bb, hh, i, 0))
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),      # l (running sum)
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels, with platform dispatch:
+TPU -> compiled kernel; CPU -> interpret mode (tests) or the jnp reference
+(production fallback).  The model code calls these entry points."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bayes_fit import bayes_fit as _bayes_fit_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _flash_pallas(q, k, v, causal=causal, window=window)
+    if impl == "interpret":
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=True)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rglru_scan(a, gx, h0, *, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _rglru_pallas(a, gx, h0)
+    if impl == "interpret":
+        return _rglru_pallas(a, gx, h0, interpret=True)
+    return ref.rglru_scan_ref(a, gx, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def bayes_fit(x, y, mask, *, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _bayes_fit_pallas(x, y, mask)
+    if impl == "interpret":
+        return _bayes_fit_pallas(x, y, mask, interpret=True)
+    return ref.bayes_fit_ref(x, y, mask)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference in
+tests/test_kernels.py; naive full-materialization — small shapes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,Sq,H,hd); k,v (B,Skv,K,hd), GQA via repeat.  fp32 softmax."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (hd ** 0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rglru_scan_ref(a, gx, h0):
+    """h_t = a_t * h_{t-1} + gx_t, via associative scan.
+    a, gx: (B, T, W) fp32; h0: (B, W)."""
+    # fold h0 into the first step: h_1 = a_1*h0 + gx_1
+    gx = gx.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, gx), axis=1)
+    return h
+
+
+def bayes_fit_ref(x, y, mask, n_iters: int = 30):
+    """reference batched BLR fit == core.bayes.fit_blr vmapped."""
+    from repro.core.bayes import fit_blr
+    return jax.vmap(lambda xx, yy, mm: fit_blr(xx, yy, mm))(x, y, mask)

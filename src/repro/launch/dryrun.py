@@ -1,0 +1,380 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# test hook: a smaller placeholder-device count may be requested on the CLI;
+# still before any jax import, so the device count is set exactly once.
+import sys  # noqa: E402
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Two passes per cell:
+  1. FULL program (scan-over-layers) — the compile-proof: memory_analysis()
+     + analytic bytes/device show it fits; this is the artifact that must
+     `.lower().compile()` for every cell on both meshes.
+  2. COST extraction — XLA's CPU cost analysis counts while-loop bodies
+     exactly once (verified empirically), so HLO FLOPs/bytes/collectives are
+     extracted from *unrolled* 1-cycle and 2-cycle lowerings and extrapolated
+     linearly (exact for homogeneous stacked cycles):
+         total = c1 + (n_cycles - 1) * (c2 - c1)
+     Microbatched training costs one microbatch and scales, with the
+     optimizer costed separately; the sLSTM time-scan gets an analytic
+     correction (documented inline).
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_small \
+      --reduced --devices 8          (CI-scale self-test)
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (SHAPES, SMOKE_SHAPES, cell_applicable,  # noqa: E402
+                           get_config, get_reduced_config, ARCHS)
+from repro.configs.base import BLK_SLSTM, ModelConfig, ShapeConfig  # noqa: E402
+from repro.dist.sharding import (axis_rules, make_rules,  # noqa: E402
+                                 param_sharding_tree)
+from repro.launch.mesh import make_production_mesh, make_test_mesh  # noqa: E402
+from repro.launch.specs import (batch_sharding, batch_specs,  # noqa: E402
+                                cache_sharding, input_specs)
+from repro.models import init_decode_cache, init_params  # noqa: E402
+from repro.models.transformer import layer_plan, param_count_exact  # noqa: E402
+from repro.perf.hbm_model import hbm_bytes_model  # noqa: E402
+from repro.perf.hlo import collective_bytes, total_collective_bytes  # noqa: E402
+from repro.perf.roofline import RooflineTerms, model_flops  # noqa: E402
+from repro.train.optimizer import (OptConfig, adamw_update,  # noqa: E402
+                                   init_opt_state)
+from repro.train.train_step import (make_decode_step, make_prefill_step,  # noqa: E402
+                                    make_train_step)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _leaf_bytes(leaf, sharding) -> float:
+    total = jnp.dtype(leaf.dtype).itemsize
+    for d in leaf.shape:
+        total *= d
+    denom = 1
+    for ax in sharding.spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            denom *= sharding.mesh.shape[a]
+    return total / denom
+
+
+def analytic_bytes_per_device(struct, shardings) -> float:
+    return sum(_leaf_bytes(l, s) for l, s in
+               zip(jax.tree.leaves(struct), jax.tree.leaves(shardings)))
+
+
+def _batch_shard_factor(rules) -> int:
+    axes = rules.mapping.get("batch") or ()
+    f = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        f *= rules.mesh.shape[a]
+    return f
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules, oc):
+    """Build + lower the step for (cfg, shape).  Returns (lowered, input_bytes)."""
+    params_struct = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = param_sharding_tree(params_struct, rules, cfg)
+    with mesh, axis_rules(rules):
+        if shape.kind == "train":
+            step = make_train_step(cfg, oc)
+            state_struct = {
+                "opt": jax.eval_shape(lambda p: init_opt_state(p, oc),
+                                      params_struct),
+            }
+            state_shard = param_sharding_tree(state_struct, rules, cfg)
+            b = batch_specs(cfg, shape)
+            bsh = batch_sharding(b, rules)
+            jitted = jax.jit(step, in_shardings=(state_shard, bsh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_struct, b)
+            in_bytes = analytic_bytes_per_device((state_struct, b),
+                                                 (state_shard, bsh))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            b = batch_specs(cfg, shape)
+            bsh = batch_sharding(b, rules)
+            jitted = jax.jit(step, in_shardings=(p_shard, bsh))
+            lowered = jitted.lower(params_struct, b)
+            in_bytes = analytic_bytes_per_device((params_struct, b),
+                                                 (p_shard, bsh))
+        else:
+            step = make_decode_step(cfg)
+            specs = input_specs(cfg, shape)
+            tok, cache, pos = specs["tokens"], specs["cache"], specs["pos"]
+            c_shard = cache_sharding(cache, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, rules.sharding("batch", None), c_shard,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_struct, tok, cache, pos)
+            in_bytes = analytic_bytes_per_device((params_struct, cache),
+                                                 (p_shard, c_shard))
+    return lowered, in_bytes
+
+
+def _costs(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    per_kind = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "coll": per_kind,
+    }
+
+
+def _coll_combine(a: dict, b: dict, fa: float, fb: float) -> dict:
+    out = {}
+    for k in set(a) | set(b):
+        ra = a.get(k, {"bytes": 0.0, "ops": 0})
+        rb = b.get(k, {"bytes": 0.0, "ops": 0})
+        out[k] = {"bytes": fa * ra["bytes"] + fb * rb["bytes"],
+                  "ops": int(fa * ra["ops"] + fb * rb["ops"])}
+    return out
+
+
+def _cost_combine(c1: dict, c2: dict, f1: float, f2: float) -> dict:
+    return {
+        "flops": f1 * c1["flops"] + f2 * c2["flops"],
+        "bytes": f1 * c1["bytes"] + f2 * c2["bytes"],
+        "transcendentals": f1 * c1["transcendentals"] + f2 * c2["transcendentals"],
+        "coll": _coll_combine(c1["coll"], c2["coll"], f1, f2),
+    }
+
+
+def _slstm_correction(cfg: ModelConfig, shape: ShapeConfig, rules) -> dict:
+    """The sLSTM cell is a true recurrence (lax.scan over time); its body is
+    counted once by the cost analysis.  Add (S-1) x per-step analytic cost:
+    recurrent block-diagonal matmul 2*4*nh*dh^2*B_loc flops (x3 for train
+    fwd+bwd), plus state read/write bytes."""
+    kinds = cfg.layer_kinds()
+    n_s = sum(1 for k in kinds if k == BLK_SLSTM)
+    if n_s == 0 or shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0, "coll": {}}
+    b_loc = max(shape.global_batch // _batch_shard_factor(rules), 1)
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    steps = shape.seq_len - 1
+    mult = 3.0 if shape.kind == "train" else 1.0
+    flops = mult * steps * n_s * (2 * 4 * nh * dh * dh * b_loc)
+    byts = mult * steps * n_s * (4 * nh * dh * dh * 4        # gate matrices
+                                 + 12 * b_loc * cfg.d_model * 4)
+    return {"flops": flops, "bytes": byts,
+            "transcendentals": mult * steps * n_s * 6 * b_loc * cfg.d_model,
+            "coll": {}}
+
+
+def _with_layers(cfg: ModelConfig, k_cycles: int) -> ModelConfig:
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    n_layers = len(prefix) + k_cycles * len(pattern) + len(tail)
+    return dataclasses.replace(cfg, num_layers=n_layers, scan_unroll=True)
+
+
+# ---------------------------------------------------------------------------
+# per-cell driver
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool, reduced: bool,
+             devices: int, out_dir: str, overrides=None,
+             tag: str = "") -> dict:
+    t0 = time.time()
+    cfg = get_reduced_config(arch) if reduced else get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shapes = SMOKE_SHAPES if shape_name in SMOKE_SHAPES else SHAPES
+    shape = shapes[shape_name]
+
+    if devices:
+        mesh = make_test_mesh(devices)
+        mesh_name = f"test_{devices}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = mesh.devices.size
+    tp = mesh.shape["model"]
+    rules = make_rules(mesh, cfg, seq_shard_kv=cfg.num_kv_heads % tp != 0,
+                       batch_size=shape.global_batch)
+    oc = OptConfig(int8_state=cfg.int8_opt_state)
+
+    # ---- pass 1: full program (compile-proof + memory) ---------------------
+    lowered, in_bytes = _lower_cell(cfg, shape, mesh, rules, oc)
+    t_low = time.time()
+    compiled = lowered.compile()
+    t_comp = time.time()
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+               "output_bytes": getattr(ma, "output_size_in_bytes", None),
+               "temp_bytes": getattr(ma, "temp_size_in_bytes", None)}
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    # ---- pass 2: cost extraction (unrolled delta) ---------------------------
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    nmb = max(cfg.microbatches, 1)
+    cost_cfg = dataclasses.replace(cfg, mlstm_impl="chunked", microbatches=1)
+    cost_shape = shape
+    if shape.kind == "train" and nmb > 1:
+        cost_shape = dataclasses.replace(shape,
+                                         global_batch=shape.global_batch // nmb)
+
+    c1_low, _ = _lower_cell(_with_layers(cost_cfg, 1), cost_shape, mesh, rules, oc)
+    c1 = _costs(c1_low.compile())
+    if n_cycles > 1:
+        c2_low, _ = _lower_cell(_with_layers(cost_cfg, 2), cost_shape, mesh,
+                                rules, oc)
+        c2 = _costs(c2_low.compile())
+        total = _cost_combine(c2, _cost_combine(c2, c1, 1.0, -1.0),
+                              1.0, float(n_cycles - 2))
+    else:
+        total = c1
+
+    if shape.kind == "train" and nmb > 1:
+        # optimizer costed separately so microbatch scaling excludes it
+        params_struct = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        p_shard = param_sharding_tree(params_struct, rules, cfg)
+        opt_struct = jax.eval_shape(lambda p: init_opt_state(p, oc),
+                                    params_struct)
+        o_shard = param_sharding_tree(opt_struct, rules, cfg)
+        with mesh, axis_rules(rules):
+            opt_low = jax.jit(
+                lambda g, o: adamw_update(g, o, oc),
+                in_shardings=(p_shard, o_shard)).lower(params_struct, opt_struct)
+        co = _costs(opt_low.compile())
+        # final = nmb * (model-only per-microbatch cost) + optimizer cost
+        model_only = _cost_combine(total, co, 1.0, -1.0)
+        total = _cost_combine(model_only, co, float(nmb), 1.0)
+
+    corr = _slstm_correction(cost_cfg, shape, rules)
+    total = _cost_combine(total, corr, 1.0, 1.0)
+
+    # ---- analytic fused HBM model -------------------------------------------
+    params_struct = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = param_sharding_tree(params_struct, rules, cfg)
+    params_bytes = analytic_bytes_per_device(params_struct, p_shard)
+    opt_bytes = 0.0
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(lambda p: init_opt_state(p, oc), params_struct)
+        opt_bytes = analytic_bytes_per_device(
+            opt_struct, param_sharding_tree(opt_struct, rules, cfg))
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        cache_struct = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_bytes = analytic_bytes_per_device(
+            cache_struct, cache_sharding(cache_struct, rules))
+    hbm_model = hbm_bytes_model(
+        cfg, shape, params_bytes_dev=params_bytes, opt_bytes_dev=opt_bytes,
+        cache_bytes_dev=cache_bytes, tp=tp,
+        batch_shard=_batch_shard_factor(rules))
+
+    n_active = cfg.active_param_count()
+    mf = model_flops(n_active, shape.tokens, shape.kind) / n_dev
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_dev=total["flops"], hbm_bytes_per_dev=total["bytes"],
+        coll_bytes_per_dev=total_collective_bytes(total["coll"]),
+        model_flops_per_dev=mf, n_chips=n_dev,
+        hbm_bytes_model_per_dev=hbm_model, per_kind=total["coll"],
+    )
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "reduced": reduced, "kind": shape.kind, "n_chips": n_dev,
+        "params": param_count_exact(cfg),
+        "active_params": n_active,
+        "memory_analysis": mem,
+        "analytic_input_bytes_per_dev": in_bytes,
+        "params_bytes_per_dev": params_bytes,
+        "opt_bytes_per_dev": opt_bytes,
+        "cache_bytes_per_dev": cache_bytes,
+        "hbm_budget_bytes": 16e9,
+        "fits_hbm": bool(in_bytes < 16e9),
+        "roofline": terms.to_dict(),
+        "lower_s": t_low - t0, "compile_s": t_comp - t_low,
+        "total_s": time.time() - t0,
+        "status": "ok",
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = os.path.join(out_dir,
+                          f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="result filename suffix (perf iters)")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf experiments)")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                if cell_applicable(arch, shape):
+                    cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    for arch, shape in cells:
+        if args.skip_done and not args.devices:
+            suffix = f"__{args.tag}" if args.tag else ""
+            fn = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            if os.path.exists(fn):
+                print(f"[skip] {arch} {shape} (done)", flush=True)
+                continue
+        try:
+            rec = run_cell(arch, shape, args.multi_pod, args.reduced,
+                           args.devices, args.out, overrides, args.tag)
+            r = rec["roofline"]
+            print(f"[ok] {arch:22s} {shape:12s} {rec['mesh']:8s} "
+                  f"compile={rec['compile_s']:6.1f}s "
+                  f"tc={r['t_compute']*1e3:9.3f}ms tm={r['t_memory']*1e3:9.3f}ms "
+                  f"tcoll={r['t_collective']*1e3:9.3f}ms "
+                  f"useful={r['useful_flops_ratio']:.3f} -> {r['bottleneck']}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {arch} {shape}", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` returns abstract inputs for the step kind
+(train / prefill / decode) — weak-type-correct, shardable, no allocation.
+Modality frontends are stubs: MusicGen gets precomputed EnCodec frame
+embeddings; Qwen2-VL gets patch embeddings + M-RoPE position streams.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import Rules
+from repro.models import init_decode_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model-input batch for a full-sequence step (train/prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        specs["frames"] = SDS((b, s, cfg.d_model), dt)
+        specs["cond"] = SDS((b, cfg.num_cond_tokens, cfg.d_model), dt)
+    else:
+        specs["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.frontend == "vision_patches":
+        specs["vision_embeds"] = SDS((b, cfg.num_vision_tokens, cfg.d_model), dt)
+        specs["positions"] = SDS((3, b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, cache, pos) abstract inputs for one decode step with a KV
+    cache of shape.seq_len."""
+    b = shape.global_batch
+    tokens = SDS((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, b, shape.seq_len))
+    pos = SDS((), jnp.int32)
+    return tokens, cache, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """All abstract inputs for the step this shape lowers."""
+    if shape.kind == "decode":
+        tokens, cache, pos = decode_specs(cfg, shape)
+        return {"tokens": tokens, "cache": cache, "pos": pos}
+    return batch_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# shardings for the inputs
+# ---------------------------------------------------------------------------
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "mask": ("batch", None),
+    "frames": ("batch", None, "embed_act"),
+    "cond": ("batch", None, None),
+    "vision_embeds": ("batch", None, None),
+    "positions": (None, "batch", None),
+}
+
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+    "slot_pos": (None,),
+    "c_kv": ("batch", "mla_kv_seq", None),
+    "k_rope": ("batch", "mla_kv_seq", None),
+    "lru_h": ("batch", "tp"),
+    "lru_conv": ("batch", None, "tp"),
+    "mc": ("batch", None, None, None),
+    "mn": ("batch", None, None),
+    "mm": ("batch", None),
+    "conv_m": ("batch", None, "tp"),
+    "sc": ("batch", None), "sn": ("batch", None),
+    "sh": ("batch", None), "sm": ("batch", None),
+}
+
+
+def batch_sharding(batch_tree, rules: Rules):
+    def one(path, leaf):
+        key = path[-1].key
+        axes = _BATCH_AXES.get(key, ("batch",))
+        axes = tuple(axes)[: len(leaf.shape)]
+        return rules.sharding(*axes)
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_sharding(cache_tree, rules: Rules):
+    def one(path, leaf):
+        key = path[-1].key
+        axes = tuple(_CACHE_AXES.get(key, ("batch",)))
+        if any(getattr(k, "key", None) == "cycles" for k in path):
+            axes = (None,) + axes          # stacked layer dim
+        axes = axes[: len(leaf.shape)]
+        return rules.sharding(*axes)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+Lotaru integration (the paper as a first-class launcher feature):
+  1. local profiling — run the train step at >=3 downsampled (batch, seq)
+     points (Section 4.4's protocol applied to ML steps), fit the Bayesian
+     linear model runtime ~ tokens (A5 holds exactly for XLA programs);
+  2. the posterior step time (mean + uncertainty) drives the Young-Daly
+     checkpoint interval and the ETA report;
+  3. checkpoints are atomic + resumable (auto-resume on restart), so a node
+     failure costs at most one interval (tested in tests/test_train_e2e.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 100 --batch 4 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.core import bayes
+from repro.data.pipeline import DataConfig, data_iterator, make_batch
+from repro.models import init_params
+from repro.sched.elastic import checkpoint_every_n_steps
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint)
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+def profile_step_time(cfg, oc, batch: int, seq: int, n_points: int = 4):
+    """Lotaru local profiling: measure the step at reduced token counts and
+    fit runtime ~ tokens.  Returns (posterior, points)."""
+    step = jax.jit(make_train_step(cfg, oc))
+    xs, ys = [], []
+    fracs = np.geomspace(0.25, 1.0, n_points)
+    for fr in fracs:
+        b = max(1, int(batch * fr))
+        dc = DataConfig(cfg.vocab_size, seq, b, seed=7)
+        data = {k: jnp.asarray(v) for k, v in make_batch(dc, 0).items()}
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        state = {"opt": init_opt_state(params, oc)}
+        state, _ = step(state, data)                 # compile + warm
+        jax.block_until_ready(state["opt"]["master"])
+        t0 = time.perf_counter()
+        state, _ = step(state, data)
+        jax.block_until_ready(state["opt"]["master"])
+        xs.append(b * seq)
+        ys.append(time.perf_counter() - t0)
+    post = bayes.fit_blr(np.asarray(xs, np.float32), np.asarray(ys, np.float32))
+    return {k: np.asarray(v) for k, v in post.items()}, list(zip(xs, ys))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-cost-s", type=float, default=2.0)
+    ap.add_argument("--node-mtbf-h", type=float, default=24.0)
+    ap.add_argument("--n-nodes", type=int, default=1)
+    ap.add_argument("--skip-profile", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, remat="none", microbatches=1)
+    oc = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                   total_steps=args.steps, int8_state=cfg.int8_opt_state)
+
+    ckpt_interval = max(args.steps // 5, 10)
+    if not args.skip_profile:
+        post, pts = profile_step_time(cfg, oc, args.batch, args.seq)
+        mean, std = bayes.predict_blr(post, np.float32(args.batch * args.seq))
+        mean, std = float(mean), float(std)
+        ckpt_interval = checkpoint_every_n_steps(
+            mean, args.ckpt_cost_s, args.node_mtbf_h * 3600, args.n_nodes)
+        eta_s = args.steps * mean
+        print(f"[lotaru] predicted step time {mean*1e3:.1f}ms "
+              f"(+-{std*1e3:.1f}ms)  ETA {eta_s/60:.1f}min  "
+              f"young-daly ckpt interval {ckpt_interval} steps", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnums=(0,))
+    params = init_params(jax.random.PRNGKey(42), cfg)
+    state = {"opt": init_opt_state(params, oc)}
+
+    start = 0
+    ck = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ck:
+        restored = restore_checkpoint(args.ckpt_dir, state)
+        if restored is not None:
+            start, state, meta = restored
+            print(f"[resume] restored step {start}", flush=True)
+
+    dc = DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0)
+    it = data_iterator(dc, start_step=start)
+    t0 = time.perf_counter()
+    losses = []
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+            dt = (time.perf_counter() - t0) / max(step + 1 - start, 1)
+            print(f"step {step+1:5d}  loss {losses[-1]:.4f}  "
+                  f"{dt*1e3:7.1f} ms/step", flush=True)
+        if ck and (step + 1) % ckpt_interval == 0:
+            ck.save(step + 1, state, {"arch": args.arch})
+    if ck:
+        ck.save(args.steps, state, {"arch": args.arch})
+        ck.wait()
+    print(f"[done] loss first->last: {losses[0]:.4f} -> {losses[-1]:.4f}",
+          flush=True)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.transformer import (  # noqa: F401
+    decode_step, forward, init_decode_cache, init_params, layer_plan,
+    loss_fn, param_count_exact,
+)

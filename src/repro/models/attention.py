@@ -1,0 +1,369 @@
+"""Attention blocks: GQA (full / sliding-window / local), MLA, cross-attn.
+
+Design notes (TPU adaptation, see DESIGN.md):
+  * flat-head layout: wq (d, H, hd); KV expanded to H query heads via a
+    static gather (`take`) — partitions trivially under GSPMD with zero
+    communication (each device gathers its own heads from replicated KV).
+  * full-sequence attention uses a *chunked online-softmax* (flash-attention
+    expressed in XLA): a static python double-loop over (q-chunk, kv-chunk)
+    pairs touching only the causal/banded region, so HLO FLOPs match the
+    true causal/windowed cost and peak memory is O(chunk^2), never O(S^2).
+    This is also the lowering used by the Pallas kernel's `ops.py` fallback.
+  * sliding-window archs (Mixtral SWA, Griffin local) iterate only the
+    banded kv chunks -> sub-quadratic HLO.
+  * MLA (DeepSeek-V2) trains in the expanded form and decodes in the
+    *absorbed* form over the compressed (c_kv, k_rope) cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import apply_mrope, apply_rope, dense_init, pdtype, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+def _kv_map(cfg: ModelConfig) -> jnp.ndarray:
+    """query head -> kv head (contiguous GQA grouping; pad heads -> kv 0)."""
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    m = (jnp.arange(cfg.padded_heads) * k) // h
+    return jnp.where(jnp.arange(cfg.padded_heads) < h, m, 0)
+
+
+def head_mask(cfg: ModelConfig, dtype) -> Optional[jnp.ndarray]:
+    """1/0 mask over padded query heads.  Zero-padded head rows in wq/wo plus
+    this mask give pad heads exactly-zero activations *and* gradients, so the
+    padded model is bitwise-equivalent to the unpadded one (DESIGN.md)."""
+    hp = cfg.padded_heads
+    if hp == cfg.num_heads:
+        return None
+    return (jnp.arange(hp) < cfg.num_heads).astype(dtype)
+
+
+def expand_kv(x: jnp.ndarray, cfg: ModelConfig,
+              seq_name: str = "act_seq") -> jnp.ndarray:
+    """(B, S, K, hd) -> (B, S, H_pad, hd) by static gather (no materialized
+    broadcast across devices: output is head-sharded like q).  For decode
+    with a sequence-sharded cache pass seq_name='kv_seq' so the expansion
+    stays seq-sharded (heads replicated) instead of forcing an all-to-all."""
+    if cfg.num_kv_heads == cfg.padded_heads:
+        return x
+    out = jnp.take(x, _kv_map(cfg), axis=2)
+    return shard(out, "batch", seq_name, "heads_act", None)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (self-attention over a full sequence)
+# ---------------------------------------------------------------------------
+def _chunk_sizes(s_q: int, s_kv: int) -> Tuple[int, int]:
+    qc = min(s_q, 1024 if s_q <= 8192 else 2048)
+    kc = min(s_kv, 1024 if s_kv <= 8192 else 4096)
+    return qc, kc
+
+
+def chunked_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             *, window: int = 0, pos_offset: int = 0) -> jnp.ndarray:
+    """q,k,v: (B, S, H, hd) (kv already head-expanded).  Causal; if window>0,
+    additionally bands attention to the last `window` positions.  Static
+    chunk loop => exact banded FLOPs in HLO."""
+    b, s_q, h, hd = q.shape
+    hd_v = v.shape[-1]
+    s_kv = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    qc, kc = _chunk_sizes(s_q, s_kv)
+    n_q = -(-s_q // qc)
+    out_chunks = []
+    for i in range(n_q):
+        q_lo, q_hi = i * qc, min((i + 1) * qc, s_q)
+        qi = q[:, q_lo:q_hi].astype(jnp.float32) * scale      # (B,qc,H,hd)
+        # causal upper bound: last query in chunk attends kv <= q_hi-1
+        kv_hi = min(q_hi + pos_offset, s_kv)
+        kv_lo = 0
+        if window > 0:
+            kv_lo = max(0, q_lo + pos_offset - window + 1)
+            kv_lo = (kv_lo // kc) * kc
+        m = jnp.full((b, h, q_hi - q_lo), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, h, q_hi - q_lo), jnp.float32)
+        acc = jnp.zeros((b, h, q_hi - q_lo, hd_v), jnp.float32)
+        j = kv_lo
+        while j < kv_hi:
+            j_hi = min(j + kc, kv_hi)
+            kj = k[:, j:j_hi].astype(jnp.float32)
+            vj = v[:, j:j_hi].astype(jnp.float32)
+            s_ij = jnp.einsum("bqhd,bkhd->bhqk", qi, kj)      # (B,H,qc,kc)
+            qpos = (jnp.arange(q_lo, q_hi) + pos_offset)[:, None]
+            kpos = jnp.arange(j, j_hi)[None, :]
+            mask = kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            s_ij = jnp.where(mask[None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, s_ij.max(-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vj)
+            m = m_new
+            j = j_hi
+        o = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,H,qc,hd)
+        out_chunks.append(jnp.moveaxis(o, 1, 2))              # (B,qc,H,hd)
+    return jnp.concatenate(out_chunks, axis=1).astype(q.dtype)
+
+
+def full_cross_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Non-causal attention of q (B,Sq,H,hd) over k/v (B,Skv,H,hd)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+def attn_init(rng, cfg: ModelConfig) -> dict:
+    d, k_h, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    hp = cfg.padded_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hp, hd), dt, fan_in=d),
+        "wk": dense_init(ks[1], (d, k_h, hd), dt, fan_in=d),
+        "wv": dense_init(ks[2], (d, k_h, hd), dt, fan_in=d),
+        "wo": dense_init(ks[3], (hp, hd, d), dt, fan_in=cfg.num_heads * hd),
+    }
+    hm = head_mask(cfg, dt)
+    if hm is not None:
+        p["wq"] = p["wq"] * hm[None, :, None]
+        p["wo"] = p["wo"] * hm[:, None, None]
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = shard(q, "batch", "act_seq", "heads_act", None)
+    if cfg.mrope_sections:
+        q, k = apply_mrope(q, positions, cfg), apply_mrope(k, positions, cfg)
+    else:
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        q, k = apply_rope(q, pos2, cfg), apply_rope(k, pos2, cfg)
+    return q, k, v
+
+
+def attn_apply_seq(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                   positions: jnp.ndarray, make_cache: bool = False):
+    """Full-sequence (train / prefill).  Returns (out, cache or None)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    window = cfg.window if kind in ("swa", "local") else 0
+    o = chunked_causal_attention(q, expand_kv(k, cfg), expand_kv(v, cfg),
+                                 window=window)
+    hm = head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = shard(out, "batch", "act_seq", "embed_act")
+    cache = None
+    if make_cache:
+        cache = make_kv_cache(cfg, kind, k, v, x.shape[1])
+    return out, cache
+
+
+# --- KV caches --------------------------------------------------------------
+def kv_cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    if kind in ("swa", "local") and cfg.window > 0:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def make_kv_cache(cfg: ModelConfig, kind: str, k: jnp.ndarray, v: jnp.ndarray,
+                  seq_len: int) -> dict:
+    """Build cache from prefill kv (B,S,K,hd).  Windowed archs keep a ring
+    buffer of the last `window` positions."""
+    c_len = kv_cache_len(cfg, kind, seq_len)
+    s = k.shape[1]
+    if c_len < s:
+        # ring buffer: slot i holds position (s - c_len + i) ... rolled so that
+        # slot (pos % c_len) holds position pos.
+        tail_pos = jnp.arange(s - c_len, s)
+        slot = tail_pos % c_len
+        k_ring = jnp.zeros_like(k[:, :c_len]).at[:, slot].set(k[:, -c_len:])
+        v_ring = jnp.zeros_like(v[:, :c_len]).at[:, slot].set(v[:, -c_len:])
+        slots = jnp.zeros((c_len,), jnp.int32).at[slot].set(tail_pos)
+        return {"k": k_ring, "v": v_ring, "slot_pos": slots}
+    slots = jnp.arange(c_len, dtype=jnp.int32)
+    return {"k": k, "v": v, "slot_pos": slots}
+
+
+def attn_decode(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                cache: dict, pos: jnp.ndarray):
+    """One-token decode.  x: (B,1,d); pos: () int32 current position.
+    Returns (out, new_cache)."""
+    if cfg.mrope_sections:
+        # text-token decode: all three M-RoPE streams advance together
+        positions = jnp.full((3, x.shape[0], 1), pos, jnp.int32)
+    else:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    c_len = cache["k"].shape[1]
+    slot = jnp.asarray(pos % c_len, jnp.int32)  # ring for windowed; == pos otherwise
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"],
+                                            pos[None].astype(jnp.int32), (slot,))
+    k = shard(k, "batch", "kv_seq", None, None)
+    v = shard(v, "batch", "kv_seq", None, None)
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if kind in ("swa", "local") and cfg.window > 0:
+        valid &= slot_pos > pos - cfg.window
+    if cfg.decode_grouped_gqa and cfg.padded_heads % cfg.num_kv_heads == 0:
+        # grouped einsum: no materialized KV expansion (perf variant; needs
+        # heads unsharded, i.e. the seq-sharded-KV decode regime)
+        b = q.shape[0]
+        grp = cfg.padded_heads // cfg.num_kv_heads
+        qg = q.reshape(b, 1, cfg.num_kv_heads, grp, cfg.head_dim)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))                   # (B,K,G,1,C)
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pr, v.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.padded_heads, cfg.head_dim).astype(x.dtype)
+    else:
+        ke, ve = expand_kv(k, cfg, "kv_seq"), expand_kv(v, cfg, "kv_seq")
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                       ke.astype(jnp.float32))                  # (B,H,1,C)
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr,
+                       ve.astype(jnp.float32)).astype(x.dtype)
+    hm = head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def mla_init(rng, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora_rank), dt),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank, dt),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, h, qk), dt,
+                           fan_in=cfg.q_lora_rank),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dt),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dt),
+        "wkv_b": dense_init(ks[3], (cfg.kv_lora_rank, h,
+                                    cfg.qk_nope_head_dim + cfg.v_head_dim), dt,
+                            fan_in=cfg.kv_lora_rank),
+        "wo_mla": dense_init(ks[4], (h, cfg.v_head_dim, d), dt,
+                             fan_in=h * cfg.v_head_dim),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    q = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])
+    q = shard(q, "batch", "act_seq", "heads_act", None)
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg,
+                        head_dim=cfg.qk_rope_head_dim)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    kv_a = x @ p["wkv_a"]                                   # (B,S,lora+rope)
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:][:, :, None, :]    # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg, head_dim=cfg.qk_rope_head_dim)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_apply_seq(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, make_cache: bool = False):
+    """Expanded-form MLA for train/prefill."""
+    pos2 = positions if positions.ndim == 2 else positions[0]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos2)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, pos2)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    kv = shard(kv, "batch", "act_seq", "heads_act", None)
+    k_nope = kv[..., : cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim:]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_nope.shape[:3] + (cfg.qk_rope_head_dim,))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    o = chunked_causal_attention(q, k, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo_mla"])
+    out = shard(out, "batch", "act_seq", "embed_act")
+    cache = None
+    if make_cache:
+        cache = {"c_kv": c_kv, "k_rope": k_rope,
+                 "slot_pos": jnp.arange(x.shape[1], dtype=jnp.int32)}
+    return out, cache
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray):
+    """Absorbed-form MLA decode over the compressed (c_kv, k_rope) cache."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)           # (B,1,H,*)
+    c_new, kr_new = _mla_ckv(p, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos[None].astype(jnp.int32), (pos,))
+    wkv_k = p["wkv_b"][..., : cfg.qk_nope_head_dim]         # (lora,H,nope)
+    wkv_v = p["wkv_b"][..., cfg.qk_nope_head_dim:]          # (lora,H,v)
+    q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, wkv_k)       # (B,1,H,lora)
+    scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32), c_kv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    s = jnp.where(((slot_pos >= 0) & (slot_pos <= pos))[None, None, None, :],
+                  s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqs,bsr->bqhr", pr, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhv->bqhv", o_c.astype(x.dtype), wkv_v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo_mla"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (MusicGen conditioning)
+# ---------------------------------------------------------------------------
+def cross_attn_init(rng, cfg: ModelConfig) -> dict:
+    return attn_init(rng, cfg)
+
+
+def cross_attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                     cond_k: jnp.ndarray, cond_v: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = shard(q, "batch", "act_seq", "heads_act", None)
+    o = full_cross_attention(q, expand_kv(cond_k, cfg), expand_kv(cond_v, cfg))
+    hm = head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(out, "batch", "act_seq", "embed_act")
+
+
+def cross_kv(p: dict, cfg: ModelConfig, cond: jnp.ndarray):
+    """Precompute conditioning K/V once (prefill) for reuse at decode."""
+    k = jnp.einsum("bsd,dhk->bshk", cond, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", cond, p["wv"])
+    return k, v

@@ -1,0 +1,145 @@
+"""Shared building blocks: norms, rotary embeddings, FFNs, losses."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(rng, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(max(fan, 1), jnp.float32))
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    half = rot // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / max(half, 1)))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig,
+               head_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32.  Rotates the first
+    cfg.rope_fraction of head dims (pairs interleaved as [..half, half..])."""
+    hd = head_dim or x.shape[-1]
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(hd, cfg.rope_fraction, cfg.rope_theta)        # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv           # (B,S,half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), x_pass], -1)
+    return out
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  x: (B,S,H,hd); positions3: (3,B,S) for
+    (temporal, height, width).  Frequency dims are split into
+    cfg.mrope_sections, each section using its own position stream."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(cfg.mrope_sections) == half, (cfg.mrope_sections, half)
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # build per-frequency position selector
+    sec_id = jnp.repeat(
+        jnp.arange(len(cfg.mrope_sections)),
+        jnp.asarray(cfg.mrope_sections),
+        total_repeat_length=half,
+    )                                                              # (half,)
+    pos = positions3.astype(jnp.float32)                           # (3,B,S)
+    pos_sel = jnp.take(pos, sec_id, axis=0)                        # (half,B,S)
+    ang = jnp.moveaxis(pos_sel, 0, -1) * inv                       # (B,S,half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], -1)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def ffn_init(rng, cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    p = {"wi": dense_init(ks[0], (d, d_ff), dt),
+         "wdown": dense_init(ks[1], (d_ff, d), dt)}
+    if cfg.ffn_kind == "swiglu":
+        p["wg"] = dense_init(ks[2], (d, d_ff), dt)
+    return p
+
+
+def ffn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["wi"]
+    h = shard(h, "batch", "act_seq", "tp")
+    if cfg.ffn_kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["wdown"]
+    return shard(out, "batch", "act_seq", "embed_act")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (..., V) [may be vocab-sharded], labels (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

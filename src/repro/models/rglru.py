@@ -1,0 +1,117 @@
+"""Griffin recurrent block (RecurrentGemma): causal depthwise conv + RG-LRU.
+
+RG-LRU recurrence (per channel, gates block-diagonal over heads):
+    r_t = sigmoid(x_t W_a)           (recurrence gate)
+    i_t = sigmoid(x_t W_x)           (input gate)
+    log a_t = -c * softplus(Lambda) * r_t,   c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan (parallel over S); decode carries
+(h, conv window) state.  The hidden width is tensor-sharded over 'model'.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, pdtype
+
+_C = 8.0
+
+
+def rglru_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    nh = cfg.num_heads
+    wh = w // nh
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 6)
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, -6.0, -3.0)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dt),
+        "w_gate": dense_init(ks[1], (d, w), dt),
+        "w_out": dense_init(ks[2], (w, d), dt, fan_in=w),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), dt, fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": dense_init(ks[5], (nh, wh, wh), jnp.float32, fan_in=wh),
+        "gate_x": dense_init(jax.random.fold_in(ks[5], 1), (nh, wh, wh),
+                             jnp.float32, fan_in=wh),
+        "lru_lambda": lam,
+    }
+
+
+def _block_gate(wm: jnp.ndarray, x: jnp.ndarray, nh: int) -> jnp.ndarray:
+    """block-diagonal linear over heads: x (..., w) -> (..., w)."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (nh, shp[-1] // nh)).astype(jnp.float32)
+    y = jnp.einsum("...hk,hkj->...hj", xh, wm)
+    return y.reshape(shp)
+
+
+def _gates(p, cfg, xb):
+    nh = cfg.num_heads
+    r = jax.nn.sigmoid(_block_gate(p["gate_a"], xb, nh))
+    i = jax.nn.sigmoid(_block_gate(p["gate_x"], xb, nh))
+    log_a = -_C * jax.nn.softplus(p["lru_lambda"]) * r          # (.., w) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0))
+    gated_x = beta * (i * xb.astype(jnp.float32))
+    return a, gated_x
+
+
+def _conv_seq(p, x):
+    """causal depthwise conv via shifted adds; x (B,S,w)."""
+    cw = p["conv_w"].shape[0]
+    y = jnp.zeros_like(x)
+    for j in range(cw):
+        shift = cw - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xs * p["conv_w"][j]
+    return y + p["conv_b"]
+
+
+def rglru_apply_seq(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    make_cache: bool = False):
+    """x: (B,S,d) -> (out, cache or None)."""
+    xb = x @ p["w_x"]
+    xb = shard(xb, "batch", "act_seq", "tp")
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    gate = shard(gate, "batch", "act_seq", "tp")
+    xc = _conv_seq(p, xb)
+    a, gx = _gates(p, cfg, xc)
+    # associative scan over time: h_t = a_t h_{t-1} + gx_t
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a_c, h = jax.lax.associative_scan(comb, (a, gx), axis=1)
+    h = h.astype(x.dtype)
+    out = (h * gate) @ p["w_out"]
+    out = shard(out, "batch", "act_seq", "embed_act")
+    cache = None
+    if make_cache:
+        cw = cfg.conv_width
+        conv_state = jnp.pad(xb, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        cache = {"lru_h": h[:, -1].astype(jnp.float32), "lru_conv": conv_state}
+    return out, cache
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+                 pos: jnp.ndarray):
+    """One-step decode.  x (B,1,d); cache {'lru_h': (B,w) fp32, 'lru_conv': (B,cw-1,w)}."""
+    xb = (x @ p["w_x"])[:, 0]                                    # (B,w)
+    gate = jax.nn.gelu(x @ p["w_gate"])[:, 0]
+    conv = cache["lru_conv"]
+    cw = p["conv_w"].shape[0]
+    xc = xb * p["conv_w"][cw - 1] + p["conv_b"]
+    for j in range(cw - 1):
+        xc = xc + conv[:, j] * p["conv_w"][j]
+    a, gx = _gates(p, cfg, xc)
+    h = a * cache["lru_h"] + gx                                      # (B,w) fp32
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    new_conv = jnp.concatenate([conv[:, 1:], xb[:, None]], axis=1)
+    return out, {"lru_h": h, "lru_conv": new_conv}

@@ -1,0 +1,401 @@
+"""Model assembly: block dispatch, scan-over-layers, train/prefill/decode.
+
+Layer plan: `first_dense_layers` prefix blocks are unrolled (DeepSeek's dense
+layer 0), then `n_cycles` copies of `block_pattern` run under `lax.scan` with
+stacked params (keeps HLO size O(1) in depth for 512-way AOT compiles), then
+a tail remainder is unrolled (RecurrentGemma's 38 = 12*(r,r,l) + (r,r)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTENTION_KINDS, ATTN_FULL, ATTN_LOCAL, ATTN_MLA, ATTN_SWA,
+    BLK_MLSTM, BLK_RGLRU, BLK_SLSTM, ModelConfig,
+)
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    cross_entropy, dense_init, embed_init, ffn_apply, ffn_init, pdtype,
+    rmsnorm, rmsnorm_init, softcap,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+def layer_plan(cfg: ModelConfig):
+    kinds = cfg.layer_kinds()
+    n_prefix = cfg.first_dense_layers
+    prefix = kinds[:n_prefix]
+    rest = kinds[n_prefix:]
+    plen = len(cfg.block_pattern)
+    n_cycles = len(rest) // plen
+    tail = rest[n_cycles * plen:]
+    return prefix, cfg.block_pattern, n_cycles, tail
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.ffn_kind != "none" and (kind in ATTENTION_KINDS or kind == BLK_RGLRU)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def block_init(rng, cfg: ModelConfig, kind: str, use_moe: bool) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, pdtype(cfg))}
+    if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        p["attn"] = attn.attn_init(ks[0], cfg)
+    elif kind == ATTN_MLA:
+        p["attn"] = attn.mla_init(ks[0], cfg)
+    elif kind == BLK_RGLRU:
+        p["mix"] = rglru_mod.rglru_init(ks[0], cfg)
+    elif kind == BLK_MLSTM:
+        p["mix"] = xlstm_mod.mlstm_init(ks[0], cfg)
+    elif kind == BLK_SLSTM:
+        p["mix"] = xlstm_mod.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.cross_attn and kind in ATTENTION_KINDS:
+        p["xnorm"] = rmsnorm_init(cfg.d_model, pdtype(cfg))
+        p["xattn"] = attn.cross_attn_init(ks[1], cfg)
+    if _has_ffn(cfg, kind):
+        p["norm2"] = rmsnorm_init(cfg.d_model, pdtype(cfg))
+        if use_moe:
+            p["moe"] = moe_mod.moe_init(ks[2], cfg)
+        else:
+            d_ff = cfg.dense_d_ff if (cfg.is_moe and cfg.dense_d_ff) else cfg.d_ff
+            p["ffn"] = ffn_init(ks[2], cfg, d_ff)
+    return p
+
+
+def block_apply_seq(p: dict, cfg: ModelConfig, kind: str, x, positions,
+                    cond, make_cache: bool):
+    """Full-sequence block.  Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache: Dict[str, Any] = {}
+    if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        mix, c = attn.attn_apply_seq(p["attn"], cfg, kind, h, positions,
+                                     make_cache)
+    elif kind == ATTN_MLA:
+        mix, c = attn.mla_apply_seq(p["attn"], cfg, h, positions, make_cache)
+    elif kind == BLK_RGLRU:
+        mix, c = rglru_mod.rglru_apply_seq(p["mix"], cfg, h, make_cache)
+    elif kind == BLK_MLSTM:
+        mix, c = xlstm_mod.mlstm_apply_seq(p["mix"], cfg, h, make_cache)
+    elif kind == BLK_SLSTM:
+        mix, c = xlstm_mod.slstm_apply_seq(p["mix"], cfg, h, make_cache)
+    else:
+        raise ValueError(kind)
+    if c:
+        cache.update(c)
+    x = x + mix
+    if "xattn" in p:
+        ck, cv = attn.cross_kv(p["xattn"], cfg, cond)
+        hx = rmsnorm(p["xnorm"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_apply(p["xattn"], cfg, hx, ck, cv)
+        if make_cache:
+            cache["xk"], cache["xv"] = ck, cv
+    if "moe" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, a = moe_mod.moe_apply(p["moe"], cfg, h2)
+        x = x + y
+        aux = aux + a
+    elif "ffn" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + ffn_apply(p["ffn"], cfg, h2)
+    x = shard(x, "batch", "act_seq", "embed_act")
+    return x, cache, aux
+
+
+def block_decode(p: dict, cfg: ModelConfig, kind: str, x, cache, pos):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        sub = {k: cache[k] for k in ("k", "v", "slot_pos")}
+        mix, c = attn.attn_decode(p["attn"], cfg, kind, h, sub, pos)
+    elif kind == ATTN_MLA:
+        sub = {k: cache[k] for k in ("c_kv", "k_rope", "slot_pos")}
+        mix, c = attn.mla_decode(p["attn"], cfg, h, sub, pos)
+    elif kind == BLK_RGLRU:
+        sub = {k: cache[k] for k in ("lru_h", "lru_conv")}
+        mix, c = rglru_mod.rglru_decode(p["mix"], cfg, h, sub, pos)
+    elif kind == BLK_MLSTM:
+        sub = {k: cache[k] for k in ("mc", "mn", "mm", "conv_m")}
+        mix, c = xlstm_mod.mlstm_decode(p["mix"], cfg, h, sub, pos)
+    elif kind == BLK_SLSTM:
+        sub = {k: cache[k] for k in ("sc", "sn", "sh", "sm")}
+        mix, c = xlstm_mod.slstm_decode(p["mix"], cfg, h, sub, pos)
+    else:
+        raise ValueError(kind)
+    new_cache.update(c)
+    x = x + mix
+    if "xattn" in p:
+        hx = rmsnorm(p["xnorm"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_apply(p["xattn"], cfg, hx, cache["xk"],
+                                      cache["xv"])
+    if "moe" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, h2)
+        x = x + y
+    elif "ffn" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + ffn_apply(p["ffn"], cfg, h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    k_embed, k_head, k_pre, k_cyc, k_tail = jax.random.split(rng, 5)
+    dt = pdtype(cfg)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt)
+    if prefix:
+        params["prefix"] = {
+            str(i): block_init(jax.random.fold_in(k_pre, i), cfg, kind,
+                               use_moe=False)
+            for i, kind in enumerate(prefix)
+        }
+    if n_cycles:
+        def one_cycle(r):
+            return {f"b{i}": block_init(jax.random.fold_in(r, i), cfg, kind,
+                                        use_moe=cfg.is_moe)
+                    for i, kind in enumerate(pattern)}
+        params["cycles"] = jax.vmap(one_cycle)(
+            jax.random.split(k_cyc, n_cycles))
+    if tail:
+        params["tail"] = {
+            str(i): block_init(jax.random.fold_in(k_tail, i), cfg, kind,
+                               use_moe=cfg.is_moe)
+            for i, kind in enumerate(tail)
+        }
+    return params
+
+
+def param_count_exact(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "act_seq", "embed_act")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    logits = shard(logits, "batch", "act_seq", "vocab")
+    return softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+
+
+def _inputs_to_x(params, cfg: ModelConfig, batch):
+    """Returns (x, positions, cond)."""
+    cond = batch.get("cond")
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(pdtype(cfg))
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return shard(x, "batch", "act_seq", "embed_act"), positions, cond
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.frontend == "vision_patches":
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+        positions = batch["positions"]          # (3, B, S) M-RoPE streams
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions, cond
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _remat_wrap(fn, cfg: ModelConfig, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward(params, cfg: ModelConfig, batch, mode: str = "train"):
+    """mode 'train' -> (logits, aux); 'prefill' -> (logits, aux, cache)."""
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    make_cache = mode == "prefill"
+    x, positions, cond = _inputs_to_x(params, cfg, batch)
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict[str, Any] = {}
+
+    if prefix:
+        cache["prefix"] = {}
+        for i, kind in enumerate(prefix):
+            x, c, a = block_apply_seq(params["prefix"][str(i)], cfg, kind, x,
+                                      positions, cond, make_cache)
+            aux = aux + a
+            cache["prefix"][str(i)] = c
+
+    if n_cycles:
+        def cycle(carry, cyc_params):
+            xc, auxc = carry
+            caches = {}
+            for i, kind in enumerate(pattern):
+                xc, c, a = block_apply_seq(cyc_params[f"b{i}"], cfg, kind, xc,
+                                           positions, cond, make_cache)
+                auxc = auxc + a
+                caches[f"b{i}"] = c
+            return (xc, auxc), caches
+        cycle = _remat_wrap(cycle, cfg, mode)
+        (x, aux), cyc_caches = jax.lax.scan(cycle, (x, aux), params["cycles"],
+                                            unroll=True if cfg.scan_unroll else 1)
+        cache["cycles"] = cyc_caches
+
+    if tail:
+        cache["tail"] = {}
+        for i, kind in enumerate(tail):
+            x, c, a = block_apply_seq(params["tail"][str(i)], cfg, kind, x,
+                                      positions, cond, make_cache)
+            aux = aux + a
+            cache["tail"][str(i)] = c
+
+    logits = _logits(params, cfg, x)
+    if make_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch, mode="train")
+    mask = batch.get("mask")
+    ce = cross_entropy(logits, batch["labels"], mask)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """tokens (B,1) int32 (or frames (B,1,d) for audio via 'embed' table of
+    codebook ids); pos: scalar int32 position of the new token."""
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    x = _embed_tokens(params, cfg, tokens)
+    new_cache: Dict[str, Any] = {}
+
+    if prefix:
+        new_cache["prefix"] = {}
+        for i, kind in enumerate(prefix):
+            x, c = block_decode(params["prefix"][str(i)], cfg, kind, x,
+                                cache["prefix"][str(i)], pos)
+            new_cache["prefix"][str(i)] = c
+
+    if n_cycles:
+        def cycle(xc, inp):
+            cyc_params, cyc_cache = inp
+            caches = {}
+            for i, kind in enumerate(pattern):
+                xc, c = block_decode(cyc_params[f"b{i}"], cfg, kind, xc,
+                                     cyc_cache[f"b{i}"], pos)
+                caches[f"b{i}"] = c
+            return xc, caches
+        x, cyc_caches = jax.lax.scan(cycle, x,
+                                     (params["cycles"], cache["cycles"]),
+                                     unroll=True if cfg.scan_unroll else 1)
+        new_cache["cycles"] = cyc_caches
+
+    if tail:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(tail):
+            x, c = block_decode(params["tail"][str(i)], cfg, kind, x,
+                                cache["tail"][str(i)], pos)
+            new_cache["tail"][str(i)] = c
+
+    logits = _logits(params, cfg, x)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# decode-cache construction (zeros; used by serve start and the dry-run)
+# ---------------------------------------------------------------------------
+def _block_cache_zeros(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    dt = pdtype(cfg)
+    k_h, hd = cfg.num_kv_heads, cfg.head_dim
+    c: Dict[str, Any] = {}
+    if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        c_len = attn.kv_cache_len(cfg, kind, cache_len)
+        c["k"] = jnp.zeros((batch, c_len, k_h, hd), dt)
+        c["v"] = jnp.zeros((batch, c_len, k_h, hd), dt)
+        c["slot_pos"] = jnp.full((c_len,), -1, jnp.int32)
+    elif kind == ATTN_MLA:
+        c["c_kv"] = jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt)
+        c["k_rope"] = jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dt)
+        c["slot_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+    elif kind == BLK_RGLRU:
+        w = cfg.rglru_width or cfg.d_model
+        c["lru_h"] = jnp.zeros((batch, w), jnp.float32)
+        c["lru_conv"] = jnp.zeros((batch, cfg.conv_width - 1, w), dt)
+    elif kind == BLK_MLSTM:
+        pd = int(cfg.d_model * cfg.mlstm_proj_factor)
+        nh = cfg.num_heads
+        dh = pd // nh
+        c["mc"] = jnp.zeros((batch, nh, dh, dh), jnp.float32)
+        c["mn"] = jnp.zeros((batch, nh, dh), jnp.float32)
+        c["mm"] = jnp.zeros((batch, nh), jnp.float32)
+        c["conv_m"] = jnp.zeros((batch, cfg.conv_width - 1, pd), dt)
+    elif kind == BLK_SLSTM:
+        d = cfg.d_model
+        for key in ("sc", "sn", "sh", "sm"):
+            shp = (batch, d) if key != "sm" else (batch, d)
+            c[key] = jnp.zeros(shp, jnp.float32)
+        c["sn"] = jnp.ones((batch, d), jnp.float32)
+    if cfg.cross_attn and kind in ATTENTION_KINDS:
+        c["xk"] = jnp.zeros((batch, cfg.num_cond_tokens, k_h, hd), dt)
+        c["xv"] = jnp.zeros((batch, cfg.num_cond_tokens, k_h, hd), dt)
+    return c
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int) -> PyTree:
+    prefix, pattern, n_cycles, tail = layer_plan(cfg)
+    cache: Dict[str, Any] = {}
+    if prefix:
+        cache["prefix"] = {str(i): _block_cache_zeros(cfg, k, batch, cache_len)
+                           for i, k in enumerate(prefix)}
+    if n_cycles:
+        one = {f"b{i}": _block_cache_zeros(cfg, k, batch, cache_len)
+               for i, k in enumerate(pattern)}
+        cache["cycles"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_cycles,) + l.shape), one)
+    if tail:
+        cache["tail"] = {str(i): _block_cache_zeros(cfg, k, batch, cache_len)
+                         for i, k in enumerate(tail)}
+    return cache

@@ -1,0 +1,307 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with true hidden-state recurrence).
+
+mLSTM cell (per head, exponential gating with m-stabilizer):
+    i_t = exp(itilde_t), f_t = exp(ftilde_t)
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (C_t q_t / max(|n_t . q_t|, 1))
+
+Implemented as a time scan in the paper-faithful recurrent form
+(`mlstm_impl='scan'`) and as a chunkwise-parallel form (`'chunked'`,
+the beyond-paper perf variant — see EXPERIMENTS.md §Perf).
+
+sLSTM has recurrent gate connections R h_{t-1} (inherently sequential);
+it always uses lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, pdtype, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    pd = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.num_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_up": dense_init(ks[0], (d, pd), dt),
+        "w_up_gate": dense_init(ks[1], (d, pd), dt),
+        "wqkv": dense_init(ks[2], (3, pd, pd), dt, fan_in=pd),
+        "w_if": dense_init(ks[3], (pd, 2 * nh), jnp.float32, fan_in=pd),
+        "bias": jnp.concatenate([jnp.zeros((nh,), jnp.float32),
+                                 jnp.linspace(3.0, 6.0, nh)]),  # i, f biases
+        "conv1d": dense_init(ks[4], (cfg.conv_width, pd), dt, fan_in=cfg.conv_width),
+        "w_down_x": dense_init(ks[5], (pd, d), dt, fan_in=pd),
+        "out_norm": rmsnorm_init(pd, dt),
+    }
+
+
+def _conv_seq(w, x):
+    cw = w.shape[0]
+    y = jnp.zeros_like(x)
+    for j in range(cw):
+        shift = cw - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xs * w[j]
+    return y
+
+
+def _mlstm_qkv(p, cfg, xm, conv_fn):
+    nh = cfg.num_heads
+    pd = xm.shape[-1]
+    dh = pd // nh
+    xc = jax.nn.silu(conv_fn(xm))
+    q = xc @ p["wqkv"][0]
+    k = xc @ p["wqkv"][1] * (dh ** -0.5)
+    v = xm @ p["wqkv"][2]
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["bias"]
+    i_t, f_t = gates[..., :nh], gates[..., nh:]                   # log-gates
+    def heads(z):
+        return z.reshape(z.shape[:-1] + (nh, dh))
+    return heads(q), heads(k), heads(v), i_t, jax.nn.log_sigmoid(f_t)
+
+
+def _mlstm_scan(q, k, v, log_i, log_f):
+    """Recurrent (paper-faithful) form.  q,k,v: (B,S,H,dh); gates (B,S,H)."""
+    b, s, h, dh = q.shape
+    qf, kf, vf = (z.astype(jnp.float32) for z in (q, k, v))
+
+    def step(carry, inp):
+        c, n, m = carry                                           # (B,H,dh,dh)...
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vt[..., None, :] * kt[..., :, None])                  # (B,H,dh,dh)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.zeros((b, h), jnp.float32))
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+          jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    carry, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1), carry                          # (B,S,H,dh)
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise-parallel mLSTM (linear-attention style): O(S*chunk) intra
+    matmuls + an inter-chunk state scan.  Beyond-paper perf variant."""
+    b, s, h, dh = q.shape
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qf = q.astype(jnp.float32).reshape(b, nc, chunk, h, dh)
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, h, dh)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, dh)
+    li = log_i.reshape(b, nc, chunk, h)
+    lf = log_f.reshape(b, nc, chunk, h)
+    csum_f = jnp.cumsum(lf, axis=2)                               # (B,N,L,H)
+    total_f = csum_f[:, :, -1]                                    # (B,N,H)
+
+    # ---- inter-chunk state recursion (scan over chunks) ----
+    # decay from position j to end of chunk: total_f - csum_f
+    decay_to_end = total_f[:, :, None] - csum_f                   # (B,N,L,H)
+    g = li + decay_to_end                                          # log weight
+    m_chunk = jax.lax.stop_gradient(jnp.max(g, axis=2))           # (B,N,H)
+    w_loc = jnp.exp(g - m_chunk[:, :, None])                      # (B,N,L,H)
+    c_loc = jnp.einsum("bnlh,bnlhk,bnlhv->bnhkv", w_loc, kf, vf)
+    n_loc = jnp.einsum("bnlh,bnlhk->bnhk", w_loc, kf)
+
+    def step(carry, inp):
+        c, n, m = carry                                           # (B,H,dh,dh)..., (B,H)
+        c_l, n_l, m_l, tf = inp
+        m_new = jnp.maximum(m + tf, m_l)
+        sc_prev = jnp.exp(m + tf - m_new)
+        sc_loc = jnp.exp(m_l - m_new)
+        c = sc_prev[..., None, None] * c + sc_loc[..., None, None] * c_l
+        n = sc_prev[..., None] * n + sc_loc[..., None] * n_l
+        return (c, n, m_new), (c, n, m_new)
+
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    xs = (jnp.moveaxis(c_loc, 1, 0), jnp.moveaxis(n_loc, 1, 0),
+          jnp.moveaxis(m_chunk, 1, 0), jnp.moveaxis(total_f, 1, 0))
+    carry, states = jax.lax.scan(step, init, xs)
+    # states after chunk n; we need state BEFORE each chunk -> shift by one
+    def shift(z, init_z):
+        z = jnp.moveaxis(z, 0, 1)                                 # (B,N,...)
+        return jnp.concatenate([init_z[:, None], z[:, :-1]], axis=1)
+    c_prev = shift(states[0], init[0])
+    n_prev = shift(states[1], init[1])
+    m_prev = shift(states[2], init[2])
+
+    # ---- intra-chunk (quadratic within chunk) + inter contribution ----
+    # decay from chunk start to j (exclusive of j's own f? inclusive: state
+    # before token j inside chunk = prev_state * exp(csum_f_j)  [f_j applied]
+    d_q = csum_f                                                   # (B,N,L,H)
+    m_q = m_prev[:, :, None] + d_q                                # log scale of prev state at j
+    # intra pair weight from token t (source) to j (dest), t<=j:
+    # w = exp(li_t + csum_f_j - csum_f_t)
+    g_src = li - csum_f                                            # (B,N,L,H)
+    m_intra = jax.lax.stop_gradient(
+        jnp.max(g_src, axis=2, keepdims=True))                     # (B,N,1,H)
+    m_tot = jnp.maximum(m_q, m_intra + d_q)                        # (B,N,L,H)
+    # inter contribution
+    sc_inter = jnp.exp(m_q - m_tot)                                # (B,N,L,H)
+    num_inter = jnp.einsum("bnhkv,bnlhk->bnlhv", c_prev, qf) * sc_inter[..., None]
+    den_inter = jnp.einsum("bnhk,bnlhk->bnlh", n_prev, qf) * sc_inter
+    # intra contribution
+    w_src = jnp.exp(g_src - m_intra)                               # (B,N,L,H)
+    sc_intra = jnp.exp(m_intra + d_q - m_tot)                      # (B,N,L,H)
+    scores = jnp.einsum("bnlhk,bnthk->bnlth", qf, kf)              # (B,N,L,T,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    wmat = scores * w_src[:, :, None] * tri[None, None, :, :, None]
+    num_intra = jnp.einsum("bnlth,bnthv->bnlhv", wmat, vf) * sc_intra[..., None]
+    den_intra = jnp.einsum("bnlth->bnlh", wmat) * sc_intra
+    num = num_inter + num_intra
+    den = den_inter + den_intra
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))
+    out = (num / den[..., None]).reshape(b, s, h, dh)
+    final = (carry[0], carry[1], carry[2])
+    return out, final
+
+
+def mlstm_apply_seq(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    make_cache: bool = False):
+    xm = x @ p["w_up"]
+    xm = shard(xm, "batch", "act_seq", "tp")
+    xg = x @ p["w_up_gate"]
+    conv_fn = lambda z: _conv_seq(p["conv1d"], z)
+    q, k, v, li, lf = _mlstm_qkv(p, cfg, xm, conv_fn)
+    impl = getattr(cfg, "mlstm_impl", "scan")
+    if impl == "chunked" and x.shape[1] % cfg.mlstm_chunk == 0 and x.shape[1] > cfg.mlstm_chunk:
+        h, (c_f, n_f, m_f) = _mlstm_chunked(q, k, v, li, lf, cfg.mlstm_chunk)
+    else:
+        h, (c_f, n_f, m_f) = _mlstm_scan(q, k, v, li, lf)
+    h = h.reshape(x.shape[0], x.shape[1], -1).astype(x.dtype)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(xg)) @ p["w_down_x"]
+    out = shard(out, "batch", "act_seq", "embed_act")
+    cache = None
+    if make_cache:
+        cw = cfg.conv_width
+        conv_state = jnp.pad(xm, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        cache = {"mc": c_f, "mn": n_f, "mm": m_f, "conv_m": conv_state}
+    return out, cache
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+                 pos: jnp.ndarray):
+    nh = cfg.num_heads
+    xm = (x @ p["w_up"])[:, 0]                                    # (B,pd)
+    xg = (x @ p["w_up_gate"])[:, 0]
+    conv = cache["conv_m"]
+    cw = p["conv1d"].shape[0]
+    xc = xm * p["conv1d"][cw - 1]
+    for j in range(cw - 1):
+        xc = xc + conv[:, j] * p["conv1d"][j]
+    xc = jax.nn.silu(xc)
+    pd = xm.shape[-1]
+    dh = pd // nh
+    q = (xc @ p["wqkv"][0]).reshape(-1, nh, dh).astype(jnp.float32)
+    k = ((xc @ p["wqkv"][1]) * (dh ** -0.5)).reshape(-1, nh, dh).astype(jnp.float32)
+    v = (xm @ p["wqkv"][2]).reshape(-1, nh, dh).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["bias"]
+    li, lf = gates[..., :nh], jax.nn.log_sigmoid(gates[..., nh:])
+    c, n, m = cache["mc"], cache["mn"], cache["mm"]
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] * (v[..., None, :] * k[..., :, None])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x.shape[0], -1).astype(x.dtype)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = ((h * jax.nn.silu(xg)) @ p["w_down_x"])[:, None]
+    new_conv = jnp.concatenate([conv[:, 1:], xm[:, None]], axis=1)
+    return out, {"mc": c, "mn": n, "mm": m_new, "conv_m": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    pf = int(d * cfg.slstm_proj_factor)
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_slstm": dense_init(ks[0], (d, 4 * d), jnp.float32),    # z,i,f,o
+        "w_rec": dense_init(ks[1], (4, nh, dh, dh), jnp.float32, fan_in=dh),
+        "bias": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                 jnp.ones((d,), jnp.float32) * 4.0,
+                                 jnp.zeros((d,), jnp.float32)]),
+        "w_up": dense_init(ks[2], (d, pf), dt),
+        "w_down_x": dense_init(ks[3], (pf, d), dt, fan_in=pf),
+        "out_norm": rmsnorm_init(d, dt),
+    }
+
+
+def _slstm_step(p, cfg, carry, xt):
+    """xt: (B, 4d) pre-activations from input; carry: (c, n, h, m) each (B,d)."""
+    c, n, h, m = carry
+    d = c.shape[-1]
+    nh = cfg.num_heads
+    dh = d // nh
+    hh = h.reshape(-1, nh, dh)
+    rec = jnp.einsum("bhk,ghkj->gbhj", hh, p["w_rec"]).reshape(4, -1, d)
+    pre = jnp.moveaxis(xt.reshape(-1, 4, d), 1, 0) + rec \
+        + p["bias"].reshape(4, 1, d)
+    z = jnp.tanh(pre[0])
+    li = pre[1]                                                   # log input gate
+    lf = jax.nn.log_sigmoid(pre[2])                               # log forget
+    o = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * z
+    n = jnp.maximum(f_p * n + i_p, jnp.exp(-m_new))
+    h_new = o * (c / n)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply_seq(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    make_cache: bool = False):
+    b, s, d = x.shape
+    pre = x.astype(jnp.float32) @ p["w_slstm"]                    # (B,S,4d)
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    carry, hs = jax.lax.scan(lambda ca, xt: _slstm_step(p, cfg, ca, xt),
+                             init, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                    # (B,S,d)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = jax.nn.gelu(h @ p["w_up"]) @ p["w_down_x"]
+    out = shard(out, "batch", "act_seq", "embed_act")
+    cache = {"sc": carry[0], "sn": carry[1], "sh": carry[2], "sm": carry[3]} \
+        if make_cache else None
+    return out, cache
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jnp.ndarray, cache: dict,
+                 pos: jnp.ndarray):
+    pre = (x[:, 0].astype(jnp.float32) @ p["w_slstm"])
+    carry = (cache["sc"], cache["sn"], cache["sh"], cache["sm"])
+    carry, h = _slstm_step(p, cfg, carry, pre)
+    h = rmsnorm(p["out_norm"], h.astype(x.dtype), cfg.norm_eps)
+    out = (jax.nn.gelu(h @ p["w_up"]) @ p["w_down_x"])[:, None]
+    return out, {"sc": carry[0], "sn": carry[1], "sh": carry[2], "sm": carry[3]}

@@ -1,0 +1,103 @@
+"""Analytic HBM-traffic model (fusion-aware).
+
+XLA's CPU `cost_analysis()['bytes accessed']` counts every HLO op's operands
+with no fusion model, over-counting true HBM traffic by ~10-100x (every
+elementwise intermediate is charged).  The TPU roofline needs fused traffic,
+so we model it explicitly (MaxText-style):
+
+  train:   params (fwd read + bwd re-read + grad write)
+           + optimizer stream (master r/w, moments r/w, grad read)
+           + 2x saved activations (write fwd, read bwd) by remat policy
+           + remat recompute re-reads
+           + logits stream
+  prefill: params read + activations written + KV-cache write + logits
+  decode:  params read + KV-cache/state read+write (+ GQA expansion
+           materialization, which the pure-XLA path really does pay)
+
+All quantities are per device, honoring the sharding rules (P_loc etc.).
+Decode numbers are accurate; train numbers are a documented ~1.5x-band
+estimate.  Both the HLO-counted and modeled terms are reported in
+EXPERIMENTS.md; bottleneck classification uses this model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTENTION_KINDS, ATTN_MLA, BLK_MLSTM,
+                                BLK_RGLRU, BLK_SLSTM, ModelConfig, ShapeConfig)
+
+
+def _tree_bytes_per_dev(struct, shardings) -> float:
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(struct), jax.tree.leaves(shardings)):
+        n = jnp.dtype(leaf.dtype).itemsize
+        for d in leaf.shape:
+            n *= d
+        denom = 1
+        for ax in sh.spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= sh.mesh.shape[a]
+        total += n / denom
+    return total
+
+
+def _act_row_bytes(cfg: ModelConfig, kind: str, policy: str) -> float:
+    """saved-activation bytes per (token, layer) on one device's shard of
+    the hidden dims (TP divides d_ff/heads; we fold that in via tp)."""
+    d, dff = cfg.d_model, (cfg.moe_d_ff * cfg.top_k if cfg.is_moe else cfg.d_ff)
+    h = cfg.padded_heads * cfg.head_dim
+    if policy == "full":
+        return 2.0 * d                      # only layer inputs saved
+    if policy == "dots":
+        base = 4.0 * d + 1.0 * dff + 2.0 * h
+    else:                                    # none: all intermediates
+        base = 8.0 * d + 2.0 * dff + 4.0 * h
+    if kind in (BLK_RGLRU,):
+        base += 4.0 * (cfg.rglru_width or d)
+    if kind in (BLK_MLSTM,):
+        base += 6.0 * d * cfg.mlstm_proj_factor
+    return base
+
+
+def hbm_bytes_model(cfg: ModelConfig, shape: ShapeConfig, *,
+                    params_bytes_dev: float, opt_bytes_dev: float,
+                    cache_bytes_dev: float, tp: int, batch_shard: int) -> float:
+    kinds = cfg.layer_kinds()
+    b_loc = max(shape.global_batch // batch_shard, 1)
+    s = shape.seq_len
+    v_loc = cfg.vocab_size / (tp if not cfg.tie_embeddings or True else 1)
+
+    if shape.kind == "decode":
+        # stream params once, stream the cache/state once (+ rewrite slice),
+        # plus the GQA expansion the XLA path materializes (2x cache in+out)
+        gqa_exp = 0.0
+        if (not cfg.decode_grouped_gqa
+                and cfg.num_kv_heads != cfg.padded_heads
+                and any(k in ATTENTION_KINDS and k != ATTN_MLA for k in kinds)):
+            gqa_exp = 2.0 * cache_bytes_dev * (
+                cfg.padded_heads / max(cfg.num_kv_heads, 1))
+        logits = b_loc * v_loc * 4.0
+        return params_bytes_dev + 2.0 * cache_bytes_dev + gqa_exp + logits
+
+    act = sum(_act_row_bytes(cfg, k, cfg.remat if shape.kind == "train"
+                             else "none") for k in kinds) / tp
+    act_bytes = b_loc * s * act * 2.0       # bf16
+    logits = b_loc * s * v_loc * 4.0 * 2.0  # fp32 write + read
+
+    if shape.kind == "prefill":
+        return params_bytes_dev + act_bytes + cache_bytes_dev + logits
+
+    # train: fwd read + bwd read + grad write (bf16-ish) on params,
+    # optimizer stream (read+write all fp32/int8 state + grad), 2x acts,
+    # remat recompute re-reads activations once more under 'full'
+    recompute = 1.0 if cfg.remat == "full" else (0.5 if cfg.remat == "dots" else 0.0)
+    nmb = max(cfg.microbatches, 1)
+    return (3.0 * params_bytes_dev * nmb      # params touched per microbatch
+            + 2.0 * opt_bytes_dev
+            + (2.0 + recompute) * act_bytes
+            + 2.0 * logits)

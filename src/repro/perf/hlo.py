@@ -1,0 +1,92 @@
+"""Collective-traffic analysis of compiled (post-SPMD-partitioning) HLO.
+
+`cost_analysis()` does not report collective bytes, so we parse the optimized
+HLO text.  The CPU backend prints operands without shapes, so we read each
+collective's *output* shape plus its replica-group size and convert to
+per-device link traffic with the standard ring model:
+
+    all-reduce(out M):        2 * M * (g-1)/g     (reduce-scatter + all-gather)
+    all-gather(out M=full):   M * (g-1)/g         (bytes received per device)
+    reduce-scatter(out M):    M * (g-1)            (input is M*g per device)
+    all-to-all(out M):        M * (g-1)/g
+    collective-permute(out M): M
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _out_bytes(shapes_str: str) -> int:
+    """total bytes of the (possibly tuple) output shape string."""
+    return sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes_str))
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: per-device link bytes (ring model) and op count."""
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"bytes": 0.0, "ops": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out_b = _out_bytes(m.group(1))
+        g = max(_group_size(line), 2)
+        if kind == "all-reduce":
+            traffic = 2.0 * out_b * (g - 1) / g
+        elif kind in ("all-gather", "all-to-all", "ragged-all-to-all"):
+            traffic = out_b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            traffic = out_b * (g - 1)
+        else:  # collective-permute
+            traffic = float(out_b)
+        out[kind]["bytes"] += traffic
+        out[kind]["ops"] += 1
+    return dict(out)
+
+
+def total_collective_bytes(per_kind: Dict[str, Dict[str, float]]) -> float:
+    return sum(rec["bytes"] for rec in per_kind.values())
+
+
+def collective_report(hlo_text: str) -> str:
+    per = collective_bytes(hlo_text)
+    lines = [f"{k:20s} ops={v['ops']:5d} bytes/dev={v['bytes']/1e6:12.3f} MB"
+             for k, v in sorted(per.items())]
+    return "\n".join(lines)

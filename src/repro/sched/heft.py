@@ -1,0 +1,96 @@
+"""HEFT (Heterogeneous Earliest-Finish-Time) [Topcuoglu et al. 2002] with
+insertion-based slot search — the scheduling consumer of Lotaru's
+predictions (Section 8.1)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.microbench import NodeSpec
+from repro.workflow.dag import WorkflowDAG
+
+
+@dataclass
+class ScheduledTask:
+    uid: str
+    node: str
+    est: float     # estimated (predicted) start
+    eft: float     # estimated finish
+
+
+@dataclass
+class Schedule:
+    assignment: Dict[str, str] = field(default_factory=dict)   # uid -> node
+    order: Dict[str, List[str]] = field(default_factory=dict)  # node -> uids
+    est: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+
+    @property
+    def predicted_makespan(self) -> float:
+        return max((f for _, f in self.est.values()), default=0.0)
+
+
+def comm_seconds(gb: float, a: NodeSpec, b: NodeSpec) -> float:
+    if a.name == b.name:
+        return 0.0
+    gbps = min(getattr(a, "net_gbps", 1.0), getattr(b, "net_gbps", 1.0))
+    return gb * 8.0 / gbps
+
+
+def heft_schedule(dag: WorkflowDAG, nodes: List[NodeSpec],
+                  predict: Callable[[str, NodeSpec], float],
+                  ready_at: Optional[Dict[str, float]] = None) -> Schedule:
+    """predict(uid, node) -> predicted seconds of task uid on node."""
+    succ = dag.successors()
+    order = dag.topo_order()
+    w_avg = {u: sum(predict(u, n) for n in nodes) / len(nodes) for u in order}
+
+    # upward rank
+    rank: Dict[str, float] = {}
+    for u in reversed(order):
+        best = 0.0
+        t = dag.tasks[u]
+        for v in succ[u]:
+            avg_comm = sum(comm_seconds(t.output_gb, a, b)
+                           for a in nodes for b in nodes) / (len(nodes) ** 2)
+            best = max(best, avg_comm + rank[v])
+        rank[u] = w_avg[u] + best
+
+    sched = Schedule(order={n.name: [] for n in nodes})
+    node_by_name = {n.name: n for n in nodes}
+    slots: Dict[str, List[Tuple[float, float]]] = {n.name: [] for n in nodes}
+    finish: Dict[str, float] = {}
+
+    for u in sorted(order, key=lambda u: -rank[u]):
+        t = dag.tasks[u]
+        best = None
+        for n in nodes:
+            ready = ready_at.get(u, 0.0) if ready_at else 0.0
+            for d in t.deps:
+                dn = node_by_name[sched.assignment[d]]
+                ready = max(ready, finish[d] +
+                            comm_seconds(dag.tasks[d].output_gb, dn, n))
+            dur = predict(u, n)
+            est = _earliest_slot(slots[n.name], ready, dur)
+            if best is None or est + dur < best[1]:
+                best = (est, est + dur, n.name)
+        est, eft, name = best
+        slots[name].append((est, eft))
+        slots[name].sort()
+        sched.assignment[u] = name
+        sched.order[name].append(u)
+        sched.est[u] = (est, eft)
+        finish[u] = eft
+    for name in sched.order:
+        sched.order[name].sort(key=lambda u: sched.est[u][0])
+    return sched
+
+
+def _earliest_slot(busy: List[Tuple[float, float]], ready: float,
+                   dur: float) -> float:
+    """insertion policy: earliest gap >= dur after `ready`."""
+    start = ready
+    for (b0, b1) in busy:
+        if start + dur <= b0:
+            return start
+        start = max(start, b1)
+    return start

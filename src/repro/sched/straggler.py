@@ -1,0 +1,79 @@
+"""Uncertainty-driven straggler mitigation — the paper's Section 9 future
+work ("leverage uncertainty estimates in schedulers"), realized.
+
+Lotaru's Bayesian posterior gives a per-(task, node) predictive
+N(mean, std).  A running task is declared a straggler once its elapsed time
+exceeds the posterior q-quantile; a speculative copy is launched on the
+fastest idle node, and the first finisher wins (Mantri/Dryad-style, with a
+principled threshold instead of a heuristic multiple)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.microbench import NodeSpec
+
+_SQRT2 = math.sqrt(2.0)
+
+
+def normal_quantile(mean: float, std: float, q: float = 0.95) -> float:
+    """inverse CDF via erfinv-free approximation (Acklam) kept simple:
+    we only need the upper tail; use the rational approximation."""
+    # Peter Acklam's inverse normal approximation
+    a = [-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00]
+    p = min(max(q, 1e-12), 1 - 1e-12)
+    if p < 0.02425:
+        t = math.sqrt(-2 * math.log(p))
+        z = (((((c[0] * t + c[1]) * t + c[2]) * t + c[3]) * t + c[4]) * t + c[5]) / \
+            ((((d[0] * t + d[1]) * t + d[2]) * t + d[3]) * t + 1)
+    elif p <= 0.97575:
+        t = p - 0.5
+        r = t * t
+        z = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * t / \
+            (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    else:
+        t = math.sqrt(-2 * math.log(1 - p))
+        z = -(((((c[0] * t + c[1]) * t + c[2]) * t + c[3]) * t + c[4]) * t + c[5]) / \
+            ((((d[0] * t + d[1]) * t + d[2]) * t + d[3]) * t + 1)
+    return mean + std * z
+
+
+@dataclass
+class SpeculationDecision:
+    threshold_s: float
+    speculate: bool
+    backup_node: Optional[str] = None
+
+
+def straggler_threshold(pred_mean: float, pred_std: float,
+                        q: float = 0.95) -> float:
+    return normal_quantile(pred_mean, max(pred_std, 1e-9), q)
+
+
+def decide_speculation(elapsed_s: float, pred_mean: float, pred_std: float,
+                       idle_nodes: List[NodeSpec],
+                       predict_on: Callable[[NodeSpec], float],
+                       q: float = 0.95) -> SpeculationDecision:
+    thr = straggler_threshold(pred_mean, pred_std, q)
+    if elapsed_s <= thr or not idle_nodes:
+        return SpeculationDecision(threshold_s=thr, speculate=False)
+    best = min(idle_nodes, key=predict_on)
+    return SpeculationDecision(threshold_s=thr, speculate=True,
+                               backup_node=best.name)
+
+
+def speculative_finish(elapsed_s: float, remaining_true_s: float,
+                       backup_true_s: float) -> float:
+    """first-finisher-wins completion time after launching a backup."""
+    return elapsed_s + min(remaining_true_s, backup_true_s)

@@ -1,0 +1,129 @@
+"""Pure-JAX AdamW with fp32 master weights, global-norm clipping, and
+optional block-wise int8-quantized moments (8-bit Adam, the distributed-
+optimization trick that lets the 236B config fit 256 chips — see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_BLOCK = 128
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    int8_state: bool = False
+
+
+def lr_at(oc: OptConfig, step) -> jnp.ndarray:
+    """linear warmup -> cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    prog = (step - oc.warmup_steps) / jnp.maximum(
+        oc.total_steps - oc.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 block-quantized moment storage
+# ---------------------------------------------------------------------------
+def _q8(x: jnp.ndarray) -> dict:
+    """block-wise (last dim, block 128) symmetric int8 quantization.
+    `q` keeps the PARAM'S SHAPE (int8) so its sharding spec mirrors the
+    parameter exactly; `scale` carries a (n_blocks,) trailing dim that is
+    replicated on that axis (tiny)."""
+    shp = x.shape
+    if not shp or shp[-1] % _BLOCK != 0:
+        return {"q": x, "scale": None}          # tiny/ragged leaf: keep fp32
+    xb = x.reshape(shp[:-1] + (shp[-1] // _BLOCK, _BLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0        # (..., nb)
+    q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-20)).astype(jnp.int8)
+    return {"q": q.reshape(shp), "scale": scale}
+
+
+def _dq8(s: dict) -> jnp.ndarray:
+    if s["scale"] is None:
+        return s["q"]
+    shp = s["q"].shape
+    xb = s["q"].astype(jnp.float32).reshape(
+        shp[:-1] + (shp[-1] // _BLOCK, _BLOCK))
+    return (xb * s["scale"][..., None]).reshape(shp)
+
+
+def _moment_store(x: jnp.ndarray, int8: bool):
+    return _q8(x) if int8 else x
+
+
+def _moment_load(s, int8: bool):
+    return _dq8(s) if int8 else s
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def init_opt_state(params: PyTree, oc: OptConfig) -> PyTree:
+    # NOTE: explicit .copy() everywhere — jnp.zeros and no-op astype can
+    # return cached/shared buffers, which breaks donation (donate(a),donate(a))
+    master = jax.tree.map(lambda p: p.astype(jnp.float32).copy(), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    m = jax.tree.map(lambda z: _moment_store(z, oc.int8_state), zeros)
+    v = jax.tree.map(lambda l: l.copy(), m)
+    m = jax.tree.map(lambda l: l.copy(), m)
+    return {"step": jnp.zeros((), jnp.int32), "master": master, "m": m, "v": v}
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _is_moment_leaf(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def adamw_update(grads: PyTree, opt_state: PyTree, oc: OptConfig):
+    """Returns (new_params_bf16-compatible fp32 tree caller casts, new_state,
+    metrics).  Weight decay is decoupled (AdamW)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, master, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = _moment_load(m_s, oc.int8_state)
+        v = _moment_load(v_s, oc.int8_state)
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / (1 - oc.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - oc.b2 ** step.astype(jnp.float32))
+        new = master - lr * (mh / (jnp.sqrt(vh) + oc.eps)
+                             + oc.weight_decay * master)
+        return new, _moment_store(m, oc.int8_state), _moment_store(v, oc.int8_state)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_ma = tdef.flatten_up_to(opt_state["master"])
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_master, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,72 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bayes
+
+
+def test_recovers_linear_ground_truth(rng):
+    x = rng.uniform(0.5, 8.0, 12).astype(np.float32)
+    y = (3.0 + 11.0 * x).astype(np.float32)
+    post = bayes.fit_blr(x, y)
+    mean, std = bayes.predict_blr(post, np.float32(20.0))
+    assert abs(float(mean) - (3 + 11 * 20)) / (3 + 11 * 20) < 0.05
+    assert float(std) < 0.2 * float(mean)
+
+
+def test_uncertainty_covers_truth(rng):
+    x = rng.uniform(0.5, 5.0, 8).astype(np.float32)
+    y = (10 + 4 * x + rng.normal(0, 1.0, 8)).astype(np.float32)
+    post = bayes.fit_blr(x, y)
+    lo, hi = bayes.credible_interval(post, np.float32(10.0), z=3.0)
+    truth = 10 + 4 * 10
+    assert float(lo) < truth < float(hi)
+
+
+def test_masked_fit_ignores_padding(rng):
+    x = rng.uniform(1, 5, 10).astype(np.float32)
+    y = (2 + 7 * x).astype(np.float32)
+    xp = np.concatenate([x, np.full(6, 1e6, np.float32)])
+    yp = np.concatenate([y, np.zeros(6, np.float32)])
+    m = np.concatenate([np.ones(10), np.zeros(6)]).astype(np.float32)
+    post_m = bayes.fit_blr(xp, yp, m)
+    post = bayes.fit_blr(x, y)
+    a = bayes.predict_blr(post_m, np.float32(8.0))[0]
+    b = bayes.predict_blr(post, np.float32(8.0))[0]
+    assert abs(float(a) - float(b)) < 1e-2 * abs(float(b)) + 1e-3
+
+
+def test_batched_matches_single(rng):
+    x = rng.uniform(0.5, 6, (5, 7)).astype(np.float32)
+    y = (1 + 3 * x + rng.normal(0, 0.05, (5, 7))).astype(np.float32)
+    m = np.ones((5, 7), np.float32)
+    batch = bayes.fit_blr_batch(x, y, m)
+    for i in range(5):
+        single = bayes.fit_blr(x[i], y[i], m[i])
+        np.testing.assert_allclose(np.asarray(batch["mu"][i]),
+                                   np.asarray(single["mu"]), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(slope=st.floats(0.5, 50), intercept=st.floats(0.0, 100),
+       n=st.integers(4, 16))
+def test_property_noiseless_linear_exact(slope, intercept, n):
+    x = np.linspace(1.0, 9.0, n).astype(np.float32)
+    y = (intercept + slope * x).astype(np.float32)
+    post = bayes.fit_blr(x, y)
+    mean, _ = bayes.predict_blr(post, np.float32(5.0))
+    expect = intercept + slope * 5.0
+    assert abs(float(mean) - expect) <= 0.05 * abs(expect) + 0.5
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(0.1, 100.0))
+def test_property_time_rescaling_equivariance(scale):
+    """scaling runtimes by c scales predictions by ~c (unit coherence)."""
+    x = np.linspace(1, 8, 6).astype(np.float32)
+    y = (5 + 2 * x).astype(np.float32)
+    m1, _ = bayes.predict_blr(bayes.fit_blr(x, y), np.float32(4.0))
+    m2, _ = bayes.predict_blr(bayes.fit_blr(x, y * scale), np.float32(4.0))
+    assert abs(float(m2) - scale * float(m1)) <= 0.02 * abs(scale * float(m1)) + 1e-3

@@ -1,0 +1,61 @@
+import pytest
+
+from repro.core.extrapolation import (MachineBench, NodeRoofline,
+                                      extrapolate_roofline, factor_general,
+                                      factor_median, factor_weighted)
+from repro.sched.cluster import A1, LOCAL, PAPER_MACHINES
+from repro.core.microbench import simulate_microbench
+
+
+def _bench(spec):
+    return MachineBench(spec.name, spec.cpu, spec.mem, spec.io_read,
+                        spec.io_write)
+
+
+def test_paper_example_local_to_a1():
+    """Section 4.6's worked example: T1 100s local -> ~170s on A1 (f~1.7)."""
+    f = factor_general(_bench(LOCAL), _bench(A1))
+    assert 1.6 < f < 1.85, f
+    assert abs(100 * f - 170) < 10
+
+
+def test_factor_identity():
+    b = _bench(LOCAL)
+    assert factor_general(b, b) == pytest.approx(1.0)
+
+
+def test_factor_median():
+    assert factor_median([1.0, 3.0, 2.0]) == 2.0
+    assert factor_median([1.0, 2.0, 3.0, 4.0]) == 2.5
+
+
+def test_weighted_limits():
+    l, t = _bench(LOCAL), _bench(A1)
+    assert factor_weighted(l, t, 1.0) == pytest.approx(l.cpu / t.cpu)
+    assert factor_weighted(l, t, 0.0) == pytest.approx(l.io / t.io)
+    g = factor_general(l, t)
+    assert factor_weighted(l, t, 0.5) == pytest.approx(g)
+
+
+def test_faster_target_factor_below_one():
+    c2 = _bench(PAPER_MACHINES["C2"])
+    f = factor_general(_bench(LOCAL), c2)
+    assert f < 1.0   # C2 is faster than the local machine on both axes
+
+
+def test_roofline_extrapolation():
+    v5e = NodeRoofline("v5e", 197e12, 819e9, 50e9)
+    v5p = NodeRoofline("v5p", 459e12, 2765e9, 100e9)
+    terms = {"compute": 0.1, "memory": 0.02, "collective": 0.01}
+    t = extrapolate_roofline(terms, v5e, v5p)
+    assert t == pytest.approx(0.1 * 197 / 459, rel=1e-6)
+    # memory-bound workload scales by bandwidth ratio instead
+    terms = {"compute": 0.001, "memory": 0.05, "collective": 0.0}
+    t = extrapolate_roofline(terms, v5e, v5p)
+    assert t == pytest.approx(0.05 * 819 / 2765, rel=1e-6)
+
+
+def test_simulated_microbench_near_spec():
+    b = simulate_microbench(LOCAL, seed=0, noise=0.01)
+    assert abs(b.cpu - LOCAL.cpu) / LOCAL.cpu < 0.05
+    assert abs(b.io_read - LOCAL.io_read) / LOCAL.io_read < 0.05

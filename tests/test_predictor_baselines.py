@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import NaivePredictor, OnlineM, OnlineP
+from repro.core.correlation import masked_median, pearson
+from repro.core.predictor import BaselinePredictor, LotaruPredictor
+from repro.core.traces import TraceRow
+from repro.core.microbench import simulate_microbench
+from repro.sched.cluster import A1, C2, LOCAL
+
+
+def test_pearson_matches_numpy(rng):
+    x = rng.standard_normal(50)
+    y = 2 * x + rng.standard_normal(50) * 0.3
+    import jax.numpy as jnp
+    r = float(pearson(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)))
+    assert r == pytest.approx(float(np.corrcoef(x, y)[0, 1]), abs=1e-3)
+
+
+def test_masked_median():
+    import jax.numpy as jnp
+    v = jnp.asarray([5.0, 1.0, 9.0, 100.0])
+    m = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    assert float(masked_median(v, m)) == 5.0
+
+
+def test_naive_exact_on_proportional():
+    p = NaivePredictor().fit([1, 2, 4], [10, 20, 40])
+    assert p.predict(8) == pytest.approx(80)
+
+
+def test_online_m_correlated_uses_nearest_ratio():
+    p = OnlineM().fit([1, 2, 10], [10, 20, 100])
+    assert p.predict(9) == pytest.approx(90)          # nearest is x=10
+    assert p.predict(1.4) == pytest.approx(14)        # nearest is x=1
+
+
+def test_online_m_uncorrelated_uses_mean(rng):
+    sizes = [1, 2, 3, 4, 5]
+    runs = [50, 48, 52, 49, 51]                       # ~constant
+    p = OnlineM().fit(sizes, runs)
+    assert abs(p.r) < 0.75
+    assert p.predict(100) == pytest.approx(50.0)
+
+
+def test_online_p_uncorrelated_samples_near_distribution():
+    runs = [50, 48, 52, 49, 51]
+    p = OnlineP().fit([1, 2, 3, 4, 5], runs)
+    v = p.predict(100, seed=3)
+    assert 40 < v < 60
+
+
+def _traces(task="bwa", n=6, cpu_frac=0.8):
+    gt = lambda s: 4 + 30 * s
+    return [TraceRow("wf", task, "local", s, gt(s), cpu_fraction=cpu_frac)
+            for s in np.linspace(0.05, 0.4, n)]
+
+
+def test_lotaru_local_prediction_recovers_model():
+    p = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    p.fit(_traces())
+    mean, lo, hi = p.predict("bwa", 2.0)
+    assert mean == pytest.approx(4 + 60, rel=0.08)
+    assert lo <= mean <= hi
+
+
+def test_lotaru_extrapolates_slower_node():
+    p = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1)).fit(_traces())
+    a1 = simulate_microbench(A1, 1)
+    c2 = simulate_microbench(C2, 1)
+    m_local = p.predict("bwa", 1.0)[0]
+    m_a1 = p.predict("bwa", 1.0, a1)[0]
+    m_c2 = p.predict("bwa", 1.0, c2)[0]
+    assert m_a1 > m_local          # A1 is slower
+    assert m_c2 < m_a1             # C2 is much faster than A1
+
+
+def test_lotaru_median_fallback_for_uncorrelated():
+    rows = [TraceRow("wf", "multiqc", "local", s, r)
+            for s, r in zip([0.1, 0.2, 0.3, 0.4], [30, 29, 31, 30])]
+    p = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1)).fit(rows)
+    assert not p.models["multiqc"].correlated
+    assert p.predict("multiqc", 50.0)[0] == pytest.approx(30, abs=1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(slope=st.floats(5.0, 80.0), base=st.floats(0.5, 10.0))
+def test_property_prediction_monotone_in_size(slope, base):
+    rows = [TraceRow("wf", "t", "local", s, base + slope * s)
+            for s in np.linspace(0.05, 0.5, 5)]
+    p = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1)).fit(rows)
+    sizes = [1.0, 2.0, 4.0, 8.0]
+    preds = [p.predict("t", s)[0] for s in sizes]
+    assert all(a < b for a, b in zip(preds, preds[1:]))

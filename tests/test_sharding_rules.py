@@ -1,0 +1,77 @@
+"""Sharding-rule unit tests (no multi-device needed: PartitionSpec logic)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import Rules, logical_axes_for_path
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _rules(mapping, shape={"data": 16, "model": 16}):
+    return Rules(_FakeMesh(shape), mapping)
+
+
+def test_spec_basic():
+    r = _rules({"batch": ("data",), "tp": ("model",)})
+    assert r.spec("batch", None, "tp") == P("data", None, "model")
+
+
+def test_spec_conflict_first_wins():
+    r = _rules({"a": ("model",), "b": ("model",)})
+    assert r.spec("a", "b") == P("model")
+
+
+def test_spec_composite_axes():
+    r = _rules({"batch": ("pod", "data")},
+               shape={"pod": 2, "data": 16, "model": 16})
+    assert r.spec("batch", None) == P(("pod", "data"))
+
+
+def test_unknown_name_replicates():
+    r = _rules({})
+    assert r.spec("nope", "nada") == P()
+
+
+def test_param_axes_for_moment_leaves():
+    class K:
+        def __init__(self, key):
+            self.key = key
+    path = (K("opt"), K("m"), K("cycles"), K("b0"), K("attn"), K("wq"), K("q"))
+    axes = logical_axes_for_path(path, ndim=4)   # stacked int8 q: param shape
+    assert axes[0] is None                        # layer-stack dim
+    assert axes[1] == "fsdp" and axes[2] == "heads"
+    spath = (K("opt"), K("m"), K("cycles"), K("b0"), K("attn"), K("wq"), K("scale"))
+    saxes = logical_axes_for_path(spath, ndim=4)
+    assert saxes[-1] is None                      # block-count dim replicated
+
+
+def test_divisibility_rules_per_arch():
+    from repro.dist.sharding import make_rules
+    import jax as _jax
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    glm = make_rules(mesh, get_config("glm4-9b"))
+    assert glm.mapping["heads"] == ("model",)        # 32 % 16 == 0
+    assert glm.mapping["kv_heads"] is None           # 2 kv heads
+    smol = make_rules(mesh, get_config("smollm-360m"))
+    assert smol.mapping["heads"] == ("model",)       # padded 15 -> 16
+    mix = make_rules(mesh, get_config("mixtral-8x7b"))
+    assert mix.mapping["experts"] is None            # 8 experts < 16
+    assert mix.mapping["moe_cap"] == ("model",)
+    ds = make_rules(mesh, get_config("deepseek-v2-236b"))
+    assert ds.mapping["experts"] == ("model",)       # 160 % 16 == 0
+    assert ds.mapping["moe_cap"] is None
+
+
+def test_batch_fallback_for_tiny_batches():
+    from repro.dist.sharding import make_rules
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    r1 = make_rules(mesh, get_config("glm4-9b"), batch_size=1)
+    assert r1.mapping["batch"] is None or r1.mapping["batch"] == ()
+    r128 = make_rules(mesh, get_config("glm4-9b"), batch_size=128)
+    assert r128.mapping["batch"] == ("data",)

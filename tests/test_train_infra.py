@@ -1,0 +1,178 @@
+"""Optimizer, checkpoint, data-pipeline, and end-to-end resume tests."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import ByteTokenizer, DataConfig, make_batch
+from repro.models import init_params
+from repro.train.checkpoint import (restore_checkpoint, save_checkpoint,
+                                    latest_step)
+from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
+                                   init_opt_state, lr_at, _q8, _dq8)
+from repro.train.train_step import cast_params, make_train_step
+
+
+# --- optimizer ----------------------------------------------------------------
+def _numpy_adamw(w, g, m, v, step, oc):
+    m = oc.b1 * m + (1 - oc.b1) * g
+    v = oc.b2 * v + (1 - oc.b2) * g * g
+    mh = m / (1 - oc.b1 ** step)
+    vh = v / (1 - oc.b2 ** step)
+    lr = float(lr_at(oc, step))
+    w = w - lr * (mh / (np.sqrt(vh) + oc.eps) + oc.weight_decay * w)
+    return w, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    oc = OptConfig(lr=1e-2, warmup_steps=0, total_steps=100, clip_norm=1e9)
+    w = np.array([[1.0, -2.0], [0.5, 3.0]], np.float32)
+    params = {"w": jnp.asarray(w)}
+    state = init_opt_state(params, oc)
+    g = np.array([[0.1, -0.2], [0.3, 0.05]], np.float32)
+    m = np.zeros_like(w)
+    v = np.zeros_like(w)
+    wn = w.copy()
+    for step in range(1, 4):
+        new_master, state, _ = adamw_update({"w": jnp.asarray(g)}, state, oc)
+        wn, m, v = _numpy_adamw(wn, g, m, v, step, oc)
+        np.testing.assert_allclose(np.asarray(new_master["w"]), wn,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_grad_clipping():
+    oc = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.ones((4,))}
+    state = init_opt_state(params, oc)
+    big = {"w": jnp.full((4,), 100.0)}
+    _, state, metr = adamw_update(big, state, oc)
+    assert float(metr["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_int8_moment_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((8, 256)).astype(np.float32))
+    q = _q8(x)
+    back = _dq8(q)
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err < float(jnp.max(jnp.abs(x))) / 100
+
+
+def test_int8_optimizer_tracks_fp32(rng):
+    oc32 = OptConfig(lr=1e-2, warmup_steps=0, clip_norm=1e9)
+    oc8 = OptConfig(lr=1e-2, warmup_steps=0, clip_norm=1e9, int8_state=True)
+    params = {"w": jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))}
+    s32 = init_opt_state(params, oc32)
+    s8 = init_opt_state(params, oc8)
+    for i in range(5):
+        g = {"w": jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))}
+        m32, s32, _ = adamw_update(g, s32, oc32)
+        m8, s8, _ = adamw_update(g, s8, oc8)
+    diff = float(jnp.max(jnp.abs(m32["w"] - m8["w"])))
+    scale = float(jnp.max(jnp.abs(m32["w"])))
+    assert diff < 0.05 * scale
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(oc, 0)) == 0.0
+    assert float(lr_at(oc, 10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(oc, 100)) == pytest.approx(0.1, rel=1e-2)
+
+
+# --- checkpoint ------------------------------------------------------------------
+def test_checkpoint_roundtrip_bf16():
+    state = {"a": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+             "b": {"c": jnp.arange(5, dtype=jnp.int32)},
+             "step": jnp.asarray(7)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, state, {"note": "x"})
+        got = restore_checkpoint(d, state)
+        assert got is not None
+        step, restored, meta = got
+        assert step == 3 and meta["note"] == "x"
+        assert restored["a"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                      np.asarray(state["a"], np.float32))
+
+
+def test_checkpoint_corruption_fallback():
+    state = {"a": jnp.ones((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, state)
+        save_checkpoint(d, 2, state)
+        # corrupt the newest
+        with open(os.path.join(d, "ckpt_00000002.npz"), "wb") as f:
+            f.write(b"garbage")
+        step, _, _ = restore_checkpoint(d, state)
+        assert step == 1
+
+
+def test_checkpoint_gc_keeps_last_three():
+    state = {"a": jnp.ones((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(1, 6):
+            save_checkpoint(d, s, state)
+        assert latest_step(d) == 5
+        files = [f for f in os.listdir(d) if f.endswith(".npz")]
+        assert len(files) == 3
+
+
+# --- data pipeline --------------------------------------------------------------
+def test_data_determinism_and_resume():
+    dc = DataConfig(vocab_size=101, seq_len=16, global_batch=4, seed=3)
+    b1 = make_batch(dc, 5)
+    b2 = make_batch(dc, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(dc, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 101
+
+
+def test_data_host_sharding():
+    dc0 = DataConfig(64, 8, 8, seed=1, num_hosts=2, host_id=0)
+    dc1 = DataConfig(64, 8, 8, seed=1, num_hosts=2, host_id=1)
+    b0, b1 = make_batch(dc0, 0), make_batch(dc1, 0)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_byte_tokenizer_roundtrip():
+    t = ByteTokenizer()
+    s = "lotaru predicts runtimes"
+    assert t.decode(t.encode(s)) == s
+
+
+# --- end-to-end resume equivalence ------------------------------------------------
+def test_train_resume_bitwise_equivalent():
+    """train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    cfg = dataclasses.replace(get_reduced_config("smollm-360m"),
+                              dtype="float32")
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=6)
+    step_fn = jax.jit(make_train_step(cfg, oc))
+    dc = DataConfig(cfg.vocab_size, 16, 2, seed=0)
+
+    def run(state, lo, hi):
+        losses = []
+        for s in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in make_batch(dc, s).items()}
+            state, m = step_fn(state, batch)
+            losses.append(float(m["loss"]))
+        return state, losses
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    s_a = {"opt": init_opt_state(params, oc)}
+    s_a, losses_a = run(s_a, 0, 6)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    s_b = {"opt": init_opt_state(params, oc)}
+    s_b, l1 = run(s_b, 0, 3)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, s_b)
+        _, s_c, _ = restore_checkpoint(d, s_b)
+    s_c, l2 = run(s_c, 3, 6)
+    np.testing.assert_allclose(losses_a, l1 + l2, rtol=1e-6)
