@@ -20,8 +20,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
-    from benchmarks import (carbon, cost, prediction_error, profiling_time,
-                            roofline_report, scheduling_makespan)
+    from benchmarks import (carbon, cost, online_adaptation, prediction_error,
+                            profiling_time, roofline_report,
+                            scheduling_makespan)
     jobs = {
         "prediction_error": lambda: prediction_error.run(),
         "profiling_time": lambda: profiling_time.run(),
@@ -29,6 +30,7 @@ def main(argv=None):
             n_clusters=200 if args.full else 60),
         "carbon": lambda: carbon.run(),
         "cost": lambda: cost.run(),
+        "online_adaptation": lambda: online_adaptation.run(),
         "roofline": lambda: roofline_report.run(),
     }
     failures = 0

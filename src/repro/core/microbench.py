@@ -23,6 +23,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.extrapolation import MachineBench
+from repro.core.seeding import stable_seed
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +107,7 @@ class NodeSpec:
 
 def simulate_microbench(spec: NodeSpec, seed: int = 0,
                         noise: float = 0.03) -> MachineBench:
-    rng = np.random.default_rng(abs(hash((spec.name, seed))) % (2 ** 31))
+    rng = np.random.default_rng(stable_seed(spec.name, seed))
     jitter = lambda v: float(v * rng.lognormal(0.0, noise))
     return MachineBench(name=spec.name, cpu=jitter(spec.cpu),
                         mem=jitter(spec.mem),
@@ -119,7 +120,7 @@ def app_benchmark_runtime(task_cpu_frac: float, spec: NodeSpec,
                           seed: int = 0, noise: float = 0.02) -> float:
     """Application-specific benchmark (Section 5.2): run the task's container
     on a small reference input on `spec`; returns the measured runtime."""
-    rng = np.random.default_rng(abs(hash((spec.name, "app", seed))) % (2 ** 31))
+    rng = np.random.default_rng(stable_seed(spec.name, "app", seed))
     t = base_runtime * (task_cpu_frac * ref_spec.cpu / spec.cpu
                         + (1 - task_cpu_frac) * (ref_spec.io_read + ref_spec.io_write)
                         / (spec.io_read + spec.io_write))

@@ -25,6 +25,7 @@ from repro.core.correlation import STRONG_CORRELATION
 from repro.core.extrapolation import (MachineBench, factor_app_runtime,
                                       factor_general, factor_median,
                                       factor_weighted)
+from repro.core.seeding import stable_seed
 from repro.core.traces import PredictionRow, TraceRow
 
 
@@ -39,7 +40,7 @@ class TaskRuntimeModel:
 
     def predict_local(self, input_gb: float) -> Tuple[float, float]:
         if self.correlated and self.posterior is not None:
-            mean, std = bayes.predict_blr(self.posterior, np.float32(input_gb))
+            mean, std = bayes.predict_blr_np(self.posterior, input_gb)
             return float(mean), float(std)
         return self.median_s, self.spread_s
 
@@ -62,6 +63,7 @@ class LotaruPredictor:
 
     # ---- training -----------------------------------------------------------
     def fit(self, traces: Sequence[TraceRow]) -> "LotaruPredictor":
+        self._service = None          # posterior stack is stale after refit
         by_task: Dict[str, List[TraceRow]] = {}
         for t in traces:
             by_task.setdefault(t.task, []).append(t)
@@ -105,6 +107,24 @@ class LotaruPredictor:
         return factor_general(self.local_bench, target)   # Eq. 4
 
     # ---- prediction -------------------------------------------------------------
+    @property
+    def method_name(self) -> str:
+        return f"lotaru-{self.variant.lower()}"
+
+    def task_names(self) -> List[str]:
+        return list(self.models)
+
+    def export_posterior(self, task: str) -> dict:
+        """predict_blr-compatible posterior for every task: regression tasks
+        return the fitted posterior; median-fallback tasks a degenerate one
+        whose predictive is exactly (median, spread).  One uniform format is
+        what lets the prediction service stack thousands of task models and
+        evaluate them in a single batched kernel call."""
+        m = self.models[task]
+        if m.correlated and m.posterior is not None:
+            return m.posterior
+        return bayes.constant_posterior(m.median_s, m.spread_s)
+
     def predict(self, task: str, input_gb: float,
                 target: Optional[MachineBench] = None,
                 z: float = 1.96) -> Tuple[float, float, float]:
@@ -117,16 +137,14 @@ class LotaruPredictor:
 
     def predict_rows(self, dag_tasks, targets: Sequence[MachineBench],
                      workflow: str) -> List[PredictionRow]:
-        out = []
-        for t in dag_tasks:
-            for tgt in targets:
-                mean, lo, hi = self.predict(t.task_name, t.input_gb, tgt)
-                out.append(PredictionRow(workflow=workflow, task=t.task_name,
-                                         node=tgt.name, input_gb=t.input_gb,
-                                         predicted_s=mean, lower_s=lo,
-                                         upper_s=hi,
-                                         method=f"lotaru-{self.variant.lower()}"))
-        return out
+        """All (task, node) predictions in one batched service call (the old
+        scalar predict loop dispatched one predict_blr per pair).  The
+        service (posterior stack + factor cache) is built once per fit and
+        reused across calls."""
+        from repro.online.service import PredictionService
+        if getattr(self, "_service", None) is None:
+            self._service = PredictionService(self)
+        return self._service.predict_rows(dag_tasks, targets, workflow)
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +175,7 @@ class BaselinePredictor:
         if self.kind == "naive":
             mean = m.predict(input_gb)
         else:
-            mean = m.predict(input_gb, seed=abs(hash((task, round(input_gb, 6)))) % 997)
+            mean = m.predict(input_gb, seed=stable_seed(task, round(input_gb, 6)) % 997)
         mean = max(float(mean), 1e-3)
         return mean, mean, mean      # point predictors: no uncertainty
 

@@ -1,0 +1,239 @@
+"""Logical-axis sharding rules (GSPMD) for the LM side of the repo.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "act_seq", "embed_act")``); parameters get logical
+axes derived from their pytree path (`logical_axes_for_path`).  A `Rules`
+object maps logical names -> mesh axes for one (mesh, config) pair;
+`make_rules` encodes the divisibility-aware policy (a logical axis only
+maps to a mesh axis when the corresponding dimension tiles evenly, else it
+replicates — e.g. 2 KV heads never shard over a 16-way 'model' axis).
+
+Everything degrades to a no-op outside a mesh context: on a bare CPU test
+`shard()` returns its input unchanged and `current_rules()` is None.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+@dataclass
+class Rules:
+    """mesh + {logical name -> tuple of mesh axes (or None)}."""
+    mesh: Any
+    mapping: Dict[str, MeshAxes]
+
+    def spec(self, *names) -> P:
+        """PartitionSpec for one tensor; each mesh axis is used at most once
+        (first logical name wins), trailing replicated dims are trimmed."""
+        used = set()
+        entries = []
+        for name in names:
+            axes = self.mapping.get(name) if name else None
+            if not axes:
+                entries.append(None)
+                continue
+            axes = tuple(axes)
+            if any(a in used or a not in self.mesh.shape for a in axes):
+                entries.append(None)
+                continue
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, *names) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*names))
+
+
+# ---------------------------------------------------------------------------
+# active-rules context (used by shard() inside traced model code)
+# ---------------------------------------------------------------------------
+_ACTIVE: list = []
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Rules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def shard(x, *names):
+    """with_sharding_constraint under the active rules (no-op without)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(*names[: x.ndim])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# policy: make_rules
+# ---------------------------------------------------------------------------
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n > 0 and n % k == 0
+
+
+def make_rules(mesh, cfg, batch_size: Optional[int] = None,
+               seq_shard_kv: bool = False) -> Rules:
+    """Divisibility-aware logical->mesh mapping for one (mesh, config)."""
+    has_pod = "pod" in mesh.shape
+    data_axes: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    model: MeshAxes = ("model",)
+
+    batch: MeshAxes = data_axes
+    if batch_size is not None and not _divides(batch_size, dp):
+        batch = None
+
+    heads = model if _divides(cfg.padded_heads, tp) else None
+    kv_heads = model if _divides(cfg.num_kv_heads, tp) else None
+    experts = model if (cfg.is_moe and _divides(cfg.num_experts, tp)) else None
+    # when experts cannot tile the model axis, shard the capacity dim instead
+    moe_cap = model if (cfg.is_moe and experts is None) else None
+    moe_ff = model if (cfg.is_moe and _divides(cfg.moe_d_ff, tp)) else None
+    zero3 = cfg.fsdp or cfg.parallelism in ("fsdp", "ep_fsdp")
+
+    mapping: Dict[str, MeshAxes] = {
+        # activations
+        "batch": batch,
+        "batch_ep": batch,
+        "act_seq": None,
+        "kv_seq": model if seq_shard_kv else None,
+        "mla_kv_seq": model if seq_shard_kv else None,
+        "embed_act": None,
+        "heads_act": heads,
+        "tp": model,
+        "moe_cap_h": moe_cap,
+        # parameters
+        "vocab": model if _divides(cfg.vocab_size, tp) else None,
+        "heads": heads,
+        "kv_heads": kv_heads,
+        "experts": experts,
+        "moe_cap": moe_cap,
+        "moe_ff": moe_ff,
+        "ffn": model if _divides(cfg.d_ff, tp) else None,
+        "fsdp": data_axes if zero3 else None,
+        "embed": None,
+    }
+    return Rules(mesh, mapping)
+
+
+# ---------------------------------------------------------------------------
+# parameter logical axes from tree paths
+# ---------------------------------------------------------------------------
+# leaf name -> logical axes of the *unstacked* parameter
+_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "embed"),
+    "head": ("embed", "vocab"),
+    # attention (GQA)
+    "wq": ("fsdp", "heads", None),
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "heads", None),
+    "wkv_a": ("fsdp", None),
+    "wkv_b": (None, "heads", None),
+    "wo_mla": ("heads", None, "fsdp"),
+    # dense FFN (+ shared experts)
+    "wi": ("fsdp", "ffn"),
+    "wg": ("fsdp", "ffn"),
+    "wdown": ("ffn", "fsdp"),
+    # MoE experts
+    "router": ("fsdp", None),
+    "we_i": ("experts", "fsdp", "moe_ff"),
+    "we_g": ("experts", "fsdp", "moe_ff"),
+    "we_down": ("experts", "moe_ff", "fsdp"),
+    # RG-LRU
+    "w_x": ("fsdp", "tp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "gate_a": ("heads", None, None),
+    "gate_x": ("heads", None, None),
+    "lru_lambda": ("tp",),
+    # mLSTM
+    "w_up": ("fsdp", "tp"),
+    "w_up_gate": ("fsdp", "tp"),
+    "wqkv": (None, "tp", None),
+    "w_if": ("tp", None),
+    "conv1d": (None, "tp"),
+    "w_down_x": ("tp", "fsdp"),
+    # sLSTM
+    "w_slstm": ("fsdp", None),
+    "w_rec": (None, "heads", None, None),
+}
+
+_QUANT_LEAVES = ("q", "scale")
+
+
+def _key_of(entry) -> str:
+    return str(getattr(entry, "key", getattr(entry, "name", entry)))
+
+
+def logical_axes_for_path(path, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes of a parameter (or optimizer-moment) leaf.
+
+    Rules: the last path key naming a known weight decides the base axes;
+    int8-moment wrapper leaves ('q' keeps the param shape, 'scale' replaces
+    the last dim with a replicated block-count dim); a 'cycles' ancestor
+    prepends a replicated layer-stack dim.  Unknown leaves replicate."""
+    keys = [_key_of(k) for k in path]
+    leaf = keys[-1] if keys else ""
+    param = leaf
+    if leaf in _QUANT_LEAVES and len(keys) >= 2 and keys[-2] in _PARAM_AXES:
+        param = keys[-2]
+    axes = _PARAM_AXES.get(param)
+    if axes is None:
+        return (None,) * ndim
+    axes = tuple(axes)
+    if leaf == "scale" and param != leaf:
+        axes = axes[:-1] + (None,)          # block-count dim replicated
+    if "cycles" in keys:
+        axes = (None,) + axes               # stacked layer dim
+    if len(axes) > ndim:
+        axes = axes[len(axes) - ndim:]
+    elif len(axes) < ndim:
+        axes = (None,) * (ndim - len(axes)) + axes
+    return axes
+
+
+def param_spec_tree(tree, rules: Rules, cfg):
+    """PartitionSpec pytree mirroring a params / optimizer-state tree."""
+    def one(path, leaf):
+        ndim = len(getattr(leaf, "shape", ()))
+        if ndim == 0:
+            return P()
+        return rules.spec(*logical_axes_for_path(path, ndim))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_sharding_tree(tree, rules: Rules, cfg):
+    specs = param_spec_tree(tree, rules, cfg)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

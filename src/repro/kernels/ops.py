@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bayes_fit import bayes_fit as _bayes_fit_pallas
+from repro.kernels.bayes_fit import bayes_predict as _bayes_predict_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 
@@ -46,3 +47,38 @@ def bayes_fit(x, y, mask, *, impl: str = "auto"):
     if impl == "interpret":
         return _bayes_fit_pallas(x, y, mask, interpret=True)
     return ref.bayes_fit_ref(x, y, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _bayes_predict_jit(x, post, impl: str):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _bayes_predict_pallas(x, post)
+    if impl == "interpret":
+        return _bayes_predict_pallas(x, post, interpret=True)
+    return ref.bayes_predict_ref(x, post)
+
+
+_PREDICT_TILE = 1024            # jit shape bucket (avoids a recompile per
+_SAFE_ONE = ("beta_prec", "x_sd", "y_sd")     # distinct batch size)
+
+
+def bayes_predict(x, post, *, impl: str = "auto"):
+    """Batched posterior predictive: x (Q,), post leaves gathered per query
+    (Q, ...) -> (mean, std) each (Q,).  TPU: fused Pallas pass; CPU: the
+    vmapped predict_blr reference.
+
+    Queries are padded to _PREDICT_TILE multiples BEFORE the jit boundary:
+    a serving loop whose batch shrinks by one per completion would
+    otherwise trigger an XLA compile per distinct Q.  Padded rows use
+    benign posteriors (unit scales, zero means) and are sliced off."""
+    q = x.shape[0]
+    qp = -(-max(q, 1) // _PREDICT_TILE) * _PREDICT_TILE
+    if qp != q:
+        pad = qp - q
+        x = jnp.pad(x, (0, pad))
+        post = {k: jnp.pad(jnp.asarray(v),
+                           ((0, pad),) + ((0, 0),) * (jnp.ndim(v) - 1),
+                           constant_values=1.0 if k in _SAFE_ONE else 0.0)
+                for k, v in post.items()}
+    mean, std = _bayes_predict_jit(x, post, impl)
+    return mean[:q], std[:q]

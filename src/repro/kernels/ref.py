@@ -46,3 +46,10 @@ def bayes_fit_ref(x, y, mask, n_iters: int = 30):
     """reference batched BLR fit == core.bayes.fit_blr vmapped."""
     from repro.core.bayes import fit_blr
     return jax.vmap(lambda xx, yy, mm: fit_blr(xx, yy, mm))(x, y, mask)
+
+
+def bayes_predict_ref(x, post):
+    """reference batched posterior predictive == core.bayes.predict_blr
+    vmapped over per-query gathered posteriors.  x: (Q,), post leaves (Q, ...)."""
+    from repro.core.bayes import predict_blr
+    return jax.vmap(lambda p, xx: predict_blr(p, xx))(post, x)

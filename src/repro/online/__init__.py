@@ -1,0 +1,12 @@
+"""Online prediction subsystem: streaming Bayesian updates from task
+completions, a batched prediction service, and in-flight HEFT rescheduling.
+
+Layering: `events` is leaf-level (shared vocabulary), `predictor` wraps a
+fitted LotaruPredictor with exact conjugate updates, `service` batches
+(task, node, input) queries through the fused posterior-predictive kernel,
+`rescheduler` drives `workflow.simulator.execute_adaptive`.
+"""
+from repro.online.events import TaskCompletion, PredictionQuery  # noqa: F401
+from repro.online.predictor import OnlinePredictor               # noqa: F401
+from repro.online.service import PredictionService               # noqa: F401
+from repro.online.rescheduler import OnlineReschedulingPlanner   # noqa: F401

@@ -1,0 +1,38 @@
+"""Event vocabulary of the online subsystem (leaf module: no repro deps
+beyond dataclasses, so the simulator and service can both speak it)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class TaskCompletion:
+    """One finished task execution, as observed by the resource manager."""
+    workflow: str
+    uid: str                  # physical DAG vertex (e.g. 'bwa_mem__s3')
+    task: str                 # abstract task name (e.g. 'bwa_mem')
+    node: str                 # node the task ran on
+    input_gb: float
+    runtime_s: float
+    finish_time: float = 0.0
+
+
+@dataclass(frozen=True)
+class PredictionQuery:
+    """One (task, node, input) runtime request against the service."""
+    task: str
+    node: Optional[str]       # None -> local machine (factor 1)
+    input_gb: float
+
+
+def resolve_bench(benches, node: Optional[str]):
+    """Benchmark lookup shared by predictor and service: exact name first,
+    then the cluster-instance convention 'N2-3' -> 'N2'.  None when the
+    node is unknown (callers decide whether that is an error or a drop)."""
+    if node is None:
+        return None
+    b = benches.get(node)
+    if b is None and "-" in node:
+        b = benches.get(node.rsplit("-", 1)[0])
+    return b

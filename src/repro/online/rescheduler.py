@@ -1,0 +1,186 @@
+"""In-flight HEFT rescheduling driven by streaming prediction drift.
+
+The planner plugs into `workflow.simulator.execute_adaptive`: every
+completion is fed to the OnlinePredictor; predictions for the not-yet-
+started frontier are then re-evaluated in one batched service call.  When
+any task's new mean falls outside the uncertainty band snapshotted at the
+last planning pass (|new - ref| > z * ref_std), the frontier is re-planned
+with HEFT under the updated posteriors — running tasks keep their nodes,
+data already produced constrains ready times (finish + comm from the
+producing node to each candidate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.core.extrapolation import MachineBench
+from repro.core.microbench import NodeSpec
+from repro.online.events import PredictionQuery, TaskCompletion
+from repro.online.predictor import OnlinePredictor
+from repro.online.service import PredictionService
+from repro.sched.heft import Schedule, comm_seconds, heft_schedule
+from repro.workflow.dag import TaskInstance, WorkflowDAG
+from repro.workflow.simulator import ExecRecord, SimState
+
+
+@dataclass
+class RescheduleStats:
+    completions: int = 0
+    drift_events: int = 0
+    reschedules: int = 0
+
+
+class OnlineReschedulingPlanner:
+    def __init__(self, dag: WorkflowDAG, nodes: List[NodeSpec],
+                 online: OnlinePredictor,
+                 benches: Optional[Mapping[str, MachineBench]] = None,
+                 z: float = 1.96, cooldown: int = 0):
+        """z: band half-width in predictive stds; cooldown: minimum
+        completions between two re-planning passes (0 = none)."""
+        self.dag = dag
+        self.nodes = nodes
+        self.online = online
+        if benches:
+            self.online.benches.update(benches)
+        # the merged registry, so a planner built from an already-configured
+        # OnlinePredictor needs no benches arg (and a partial arg extends,
+        # never shadows, what the predictor knows); z forwarded so the drift
+        # band actually widens/narrows with the knob
+        self.service = PredictionService(online, online.benches, z=z)
+        self.z = z
+        self.cooldown = cooldown
+        self.stats = RescheduleStats()
+        self._since_resched = 10 ** 9
+        # uid -> (ref mean, ref std) on its currently-assigned node
+        self._band: Dict[str, Tuple[float, float]] = {}
+        self._assignment: Dict[str, str] = {}
+
+    # ---- batched prediction matrix ------------------------------------------
+    def _prediction_matrix(self, uids) -> Dict[str, Dict[str, Tuple[float,
+                                                                    float]]]:
+        """(mean, std) for every (uid, node) in ONE service call — each
+        planning pass costs one batched kernel dispatch, not T x N scalar
+        predicts (w_avg + placement loop in HEFT both read from this)."""
+        uids = list(uids)
+        queries = [PredictionQuery(self.dag.tasks[u].task_name, n.name,
+                                   self.dag.tasks[u].input_gb)
+                   for u in uids for n in self.nodes]
+        out = self.service.predict_batch(queries)
+        mat: Dict[str, Dict[str, Tuple[float, float]]] = {}
+        i = 0
+        for u in uids:
+            row = mat.setdefault(u, {})
+            for n in self.nodes:
+                mean, _, hi = out[i]
+                row[n.name] = (float(mean),
+                               float(hi - mean) / max(self.z, 1e-9))
+                i += 1
+        return mat
+
+    def _snapshot_bands(self, mat, assignment: Dict[str, str],
+                        uids: Optional[set] = None) -> None:
+        for uid, name in assignment.items():
+            if uids is not None and uid not in uids:
+                continue
+            self._band[uid] = mat[uid][name]
+        self._assignment.update(assignment)
+
+    # ---- executor protocol --------------------------------------------------
+    def initial_schedule(self) -> Schedule:
+        mat = self._prediction_matrix(self.dag.tasks)
+        sched = heft_schedule(self.dag, self.nodes,
+                              lambda u, n: mat[u][n.name][0])
+        self._band.clear()
+        self._snapshot_bands(mat, sched.assignment)
+        self._since_resched = 10 ** 9
+        return sched
+
+    def on_completion(self, rec: ExecRecord, state: SimState
+                      ) -> Optional[Schedule]:
+        t = self.dag.tasks[rec.uid]
+        self.stats.completions += 1
+        self._since_resched += 1
+        if rec.attempt == 0:
+            # failure re-runs (attempt > 0) span recovery downtime — their
+            # wall time is not the task's runtime, so they never reach the
+            # posterior
+            self.online.observe(TaskCompletion(
+                workflow=t.workflow, uid=rec.uid, task=t.task_name,
+                node=rec.node, input_gb=t.input_gb,
+                runtime_s=rec.finish - rec.start, finish_time=rec.finish))
+
+        frontier = [u for u in self.dag.tasks if u not in state.started]
+        if not frontier:
+            return None
+        # one batched sweep over the frontier on its assigned nodes
+        queries = [PredictionQuery(self.dag.tasks[u].task_name,
+                                   self._assignment[u],
+                                   self.dag.tasks[u].input_gb)
+                   for u in frontier]
+        preds = self.service.predict_batch(queries)
+        drifted = False
+        for u, (mean, _, _) in zip(frontier, preds):
+            ref_mean, ref_std = self._band[u]
+            if abs(mean - ref_mean) > self.z * max(ref_std, 1e-9):
+                drifted = True
+                break
+        if not drifted:
+            return None
+        self.stats.drift_events += 1
+        if self._since_resched <= self.cooldown:
+            return None
+        self._since_resched = 0
+        self.stats.reschedules += 1
+        return self._replan(state, set(frontier))
+
+    # ---- frontier re-planning -----------------------------------------------
+    def _replan(self, state: SimState, frontier: set) -> Schedule:
+        """HEFT over the unstarted sub-DAG; booked/finished work enters as
+        ready-time constraints (finish + comm from the producing node).
+
+        Running tasks' finishes are NOT known to a real resource manager —
+        they are estimated as start + predicted duration (never before
+        now), so the adaptive benchmark measures the online predictor, not
+        simulator oracle knowledge."""
+        sub = WorkflowDAG(self.dag.name)
+        for u in self.dag.topo_order():
+            if u not in frontier:
+                continue
+            t = self.dag.tasks[u]
+            sub.add(TaskInstance(
+                uid=u, task_name=t.task_name, workflow=t.workflow,
+                input_gb=t.input_gb, output_gb=t.output_gb, sample=t.sample,
+                deps=[d for d in t.deps if d in frontier]))
+
+        mat = self._prediction_matrix(sub.tasks)
+        node_by_name = {n.name: n for n in self.nodes}
+        # running tasks only need a prediction on their assigned node
+        running = list(state.running.items())
+        run_preds = self.service.predict_batch(
+            [PredictionQuery(self.dag.tasks[u].task_name, name,
+                             self.dag.tasks[u].input_gb)
+             for u, (name, _) in running])
+        done_at: Dict[str, Tuple[str, float]] = dict(state.finished)
+        node_avail = {n.name: state.now for n in self.nodes}
+        for (u, (name, start)), (mean, _, _) in zip(running, run_preds):
+            est_end = max(state.now, start + float(mean))
+            done_at[u] = (name, est_end)
+            node_avail[name] = max(node_avail[name], est_end)
+
+        def ready_at(uid: str, node: NodeSpec) -> float:
+            ready = state.now
+            for d in self.dag.tasks[uid].deps:
+                if d in frontier:
+                    continue
+                dn_name, end = done_at[d]
+                ready = max(ready, end + comm_seconds(
+                    self.dag.tasks[d].output_gb, node_by_name[dn_name], node))
+            return ready
+
+        new_sched = heft_schedule(sub, self.nodes,
+                                  lambda u, n: mat[u][n.name][0],
+                                  ready_at=ready_at,
+                                  node_available=node_avail)
+        self._snapshot_bands(mat, new_sched.assignment, frontier)
+        return new_sched

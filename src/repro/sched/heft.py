@@ -38,8 +38,15 @@ def comm_seconds(gb: float, a: NodeSpec, b: NodeSpec) -> float:
 
 def heft_schedule(dag: WorkflowDAG, nodes: List[NodeSpec],
                   predict: Callable[[str, NodeSpec], float],
-                  ready_at: Optional[Dict[str, float]] = None) -> Schedule:
-    """predict(uid, node) -> predicted seconds of task uid on node."""
+                  ready_at=None,
+                  node_available: Optional[Dict[str, float]] = None) -> Schedule:
+    """predict(uid, node) -> predicted seconds of task uid on node.
+
+    `ready_at` constrains task start times from outside the DAG (e.g.
+    in-flight rescheduling: data from already-finished tasks): either a
+    {uid: time} dict or a callable (uid, node) -> time so comm from the
+    producing node can be charged per candidate.  `node_available` maps
+    node name -> earliest free time (a node still running a task)."""
     succ = dag.successors()
     order = dag.topo_order()
     w_avg = {u: sum(predict(u, n) for n in nodes) / len(nodes) for u in order}
@@ -57,14 +64,22 @@ def heft_schedule(dag: WorkflowDAG, nodes: List[NodeSpec],
 
     sched = Schedule(order={n.name: [] for n in nodes})
     node_by_name = {n.name: n for n in nodes}
-    slots: Dict[str, List[Tuple[float, float]]] = {n.name: [] for n in nodes}
+    slots: Dict[str, List[Tuple[float, float]]] = {
+        n.name: ([(0.0, node_available[n.name])]
+                 if node_available and node_available.get(n.name, 0.0) > 0.0
+                 else []) for n in nodes}
     finish: Dict[str, float] = {}
 
     for u in sorted(order, key=lambda u: -rank[u]):
         t = dag.tasks[u]
         best = None
         for n in nodes:
-            ready = ready_at.get(u, 0.0) if ready_at else 0.0
+            if ready_at is None:
+                ready = 0.0
+            elif callable(ready_at):
+                ready = ready_at(u, n)
+            else:
+                ready = ready_at.get(u, 0.0)
             for d in t.deps:
                 dn = node_by_name[sched.assignment[d]]
                 ready = max(ready, finish[d] +

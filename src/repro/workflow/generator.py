@@ -20,6 +20,7 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 from repro.core.microbench import NodeSpec
+from repro.core.seeding import stable_seed
 from repro.sched.cluster import LOCAL
 from repro.workflow.dag import TaskInstance, WorkflowDAG
 
@@ -122,7 +123,7 @@ WORKFLOWS = tuple(WORKFLOW_TASKS)
 
 
 def _rng_for(*key) -> np.random.Generator:
-    return np.random.default_rng(abs(hash(tuple(key))) % (2 ** 31))
+    return np.random.default_rng(stable_seed(*key))
 
 
 # calibration to the paper's observed error magnitudes (Section 7.1:

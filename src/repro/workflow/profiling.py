@@ -11,6 +11,7 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.core.downsample import partition_sizes
+from repro.core.seeding import stable_seed
 from repro.core.traces import TraceRow
 from repro.sched.cluster import LOCAL
 from repro.workflow.generator import (GroundTruth, WORKFLOW_TASKS,
@@ -26,7 +27,7 @@ def local_profiling(workflow: str, gt: GroundTruth, training_set: int = 0,
     sizes = sample_sizes(workflow, seed=gt.seed)
     base_input = sizes[training_set % len(sizes)]
     parts = partition_sizes(base_input, n=n_partitions, fraction=fraction)
-    rng = np.random.default_rng(abs(hash((workflow, "prof", training_set))) % 2 ** 31)
+    rng = np.random.default_rng(stable_seed(workflow, "prof", training_set))
     traces: List[TraceRow] = []
     total_s = 0.0
     for m in WORKFLOW_TASKS[workflow]:

@@ -2,6 +2,13 @@
 WorkSim-PredError role, Section 8): schedules are computed from *predicted*
 runtimes, execution advances with *true* runtimes.
 
+The core loop is a heap-ordered completion-event queue — O(T log T + T N)
+instead of the old O(T^2 N) repeated polling — and every completion flows
+through an `on_complete` hook: the attachment point for the online
+prediction service (streaming Bayesian updates) and, via
+`execute_adaptive`, for in-flight HEFT rescheduling of the not-yet-started
+frontier.
+
 Also supports node failures (fail-stop with re-execution) and
 uncertainty-driven speculative straggler duplication — the fault-tolerance
 features the resource manager needs at scale.
@@ -10,7 +17,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -33,16 +40,136 @@ class SimResult:
     makespan: float
     records: List[ExecRecord]
     node_busy: Dict[str, List[Tuple[float, float]]]
+    n_reschedules: int = 0
 
     def busy_seconds(self) -> Dict[str, float]:
         return {n: sum(b - a for a, b in iv) for n, iv in self.node_busy.items()}
+
+
+@dataclass
+class SimState:
+    """Snapshot handed to completion hooks / adaptive planners.
+
+    Deliberately withholds the simulator's knowledge of in-flight tasks'
+    true finish times (and, for the same reason, exposes no node-free
+    times, which are those finishes by another name): a real resource
+    manager only knows when a running task *started* — its finish must
+    come from the predictor, otherwise adaptive scheduling would be
+    benchmarked with oracle knowledge."""
+    now: float
+    finished: Dict[str, Tuple[str, float]]       # uid -> (node, finish time)
+    running: Dict[str, Tuple[str, float]]        # uid -> (node, START time)
+    started: Set[str]                            # booked (uncancellable) uids
+
+
+class _EventLoop:
+    """Shared heap-ordered execution core for the static and adaptive
+    executors.  A task is *booked* (started) the moment its node commits to
+    it; booking pushes its completion event."""
+
+    def __init__(self, dag: WorkflowDAG, nodes: List[NodeSpec],
+                 true_runtime: Callable[[str, NodeSpec], float],
+                 failures: Optional[Dict[str, float]],
+                 straggler_factor: Optional[Callable[[str], float]]):
+        self.dag = dag
+        self.node_by_name = {n.name: n for n in nodes}
+        self.true_runtime = true_runtime
+        self.failures = failures or {}
+        self.straggler_factor = straggler_factor
+        self.finish: Dict[str, float] = {}
+        self.assigned_node: Dict[str, str] = {}
+        self.records: List[ExecRecord] = []
+        self.busy: Dict[str, List[Tuple[float, float]]] = {
+            n.name: [] for n in nodes}
+        self.node_free: Dict[str, float] = {n.name: 0.0 for n in nodes}
+        self.queues: Dict[str, List[str]] = {n.name: [] for n in nodes}
+        self.done: Set[str] = set()
+        self.started: Set[str] = set()
+        self.running: Dict[str, Tuple[str, float]] = {}   # uid -> (node, start)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, str, float, int]] = []
+        self._seq = 0
+
+    def set_queues(self, order: Dict[str, List[str]]):
+        for name in self.queues:
+            self.queues[name] = list(order.get(name, []))
+
+    def try_start(self, name: str):
+        q = self.queues[name]
+        if not q:
+            return
+        u = q[0]
+        t = self.dag.tasks[u]
+        if any(d not in self.done for d in t.deps):
+            return
+        node = self.node_by_name[name]
+        ready = 0.0
+        for d in t.deps:
+            dn = self.node_by_name[self.assigned_node[d]]
+            ready = max(ready, self.finish[d] +
+                        comm_seconds(self.dag.tasks[d].output_gb, dn, node))
+        # clamp to the current event time: a replan at `now` may surface a
+        # long-runnable task on an idle node — it starts now, not in the past
+        start = max(self.node_free[name], ready, self.now)
+        dur = self.true_runtime(u, node)
+        if self.straggler_factor is not None:
+            dur *= self.straggler_factor(u)
+        end = start + dur
+        failed = name in self.failures and start < self.failures[name] <= end
+        if failed:
+            # fail-stop mid-task: recover and re-run (adds downtime)
+            end = self.failures[name] + 60.0 + dur
+        q.pop(0)
+        self.node_free[name] = end
+        self.started.add(u)
+        self.running[u] = (name, start)
+        self._seq += 1
+        heapq.heappush(self._heap,
+                       (end, self._seq, u, name, start, int(failed)))
+
+    def start_all_runnable(self):
+        for name in self.queues:
+            self.try_start(name)
+
+    def pop(self) -> Optional[ExecRecord]:
+        if not self._heap:
+            return None
+        end, _, u, name, start, failed = heapq.heappop(self._heap)
+        self.now = end
+        self.done.add(u)
+        self.finish[u] = end
+        self.assigned_node[u] = name
+        self.running.pop(u, None)
+        self.busy[name].append((start, end))
+        # attempt > 0 marks a failure re-run: finish - start includes
+        # recovery downtime, NOT the task's runtime — observers must filter
+        rec = ExecRecord(u, name, start, end, attempt=failed)
+        self.records.append(rec)
+        return rec
+
+    def state(self, now: float) -> SimState:
+        return SimState(
+            now=now,
+            finished={u: (self.assigned_node[u], self.finish[u])
+                      for u in self.done},
+            running=dict(self.running),
+            started=set(self.started))
+
+    def result(self, n_reschedules: int = 0) -> SimResult:
+        pending = set(self.dag.tasks) - self.done
+        assert not pending, f"deadlock: {sorted(pending)[:5]}"
+        return SimResult(makespan=max(self.finish.values(), default=0.0),
+                         records=self.records, node_busy=self.busy,
+                         n_reschedules=n_reschedules)
 
 
 def execute_schedule(dag: WorkflowDAG, sched: Schedule,
                      nodes: List[NodeSpec],
                      true_runtime: Callable[[str, NodeSpec], float],
                      failures: Optional[Dict[str, float]] = None,
-                     straggler_factor: Optional[Callable[[str], float]] = None
+                     straggler_factor: Optional[Callable[[str], float]] = None,
+                     on_complete: Optional[Callable[[ExecRecord, SimState],
+                                                    None]] = None
                      ) -> SimResult:
     """Execute a static (HEFT) schedule with true runtimes.
 
@@ -51,50 +178,61 @@ def execute_schedule(dag: WorkflowDAG, sched: Schedule,
     node name -> failure time (fail-stop; its queued tasks re-run after a
     fixed recovery on the same node).  `straggler_factor(uid)` optionally
     inflates a task's true runtime (used by the straggler-mitigation tests).
+    `on_complete(record, state)` observes every completion in event order —
+    the feed for the online prediction service.
     """
-    node_by_name = {n.name: n for n in nodes}
-    finish: Dict[str, float] = {}
-    records: List[ExecRecord] = []
-    busy: Dict[str, List[Tuple[float, float]]] = {n.name: [] for n in nodes}
-    node_free = {n.name: 0.0 for n in nodes}
-    queues = {n: list(sched.order.get(n, [])) for n in node_free}
-    pending = {u for u in dag.tasks}
+    loop = _EventLoop(dag, nodes, true_runtime, failures, straggler_factor)
+    # pre-assign for comm lookups (static schedule fixes the placement)
+    loop.assigned_node.update(sched.assignment)
+    loop.set_queues(sched.order)
+    loop.start_all_runnable()
+    while True:
+        rec = loop.pop()
+        if rec is None:
+            break
+        if on_complete is not None:
+            on_complete(rec, loop.state(rec.finish))
+        loop.start_all_runnable()
+    return loop.result()
 
-    # simple list-driven simulation: repeatedly start the next runnable task
-    progress = True
-    while pending and progress:
-        progress = False
-        for name, q in queues.items():
-            if not q:
-                continue
-            u = q[0]
-            t = dag.tasks[u]
-            if any(d in pending for d in t.deps):
-                continue
-            node = node_by_name[name]
-            ready = 0.0
-            for d in t.deps:
-                dn = node_by_name[sched.assignment[d]]
-                ready = max(ready, finish[d] +
-                            comm_seconds(dag.tasks[d].output_gb, dn, node))
-            start = max(node_free[name], ready)
-            dur = true_runtime(u, node)
-            if straggler_factor is not None:
-                dur *= straggler_factor(u)
-            end = start + dur
-            if failures and name in failures and start < failures[name] <= end:
-                # fail-stop mid-task: recover and re-run (adds downtime)
-                end = failures[name] + 60.0 + dur
-            finish[u] = end
-            node_free[name] = end
-            busy[name].append((start, end))
-            records.append(ExecRecord(u, name, start, end))
-            q.pop(0)
-            pending.discard(u)
-            progress = True
-    assert not pending, f"deadlock: {sorted(pending)[:5]}"
-    return SimResult(makespan=max(finish.values()), records=records,
-                     node_busy=busy)
+
+def execute_adaptive(dag: WorkflowDAG, nodes: List[NodeSpec],
+                     planner,
+                     true_runtime: Callable[[str, NodeSpec], float],
+                     failures: Optional[Dict[str, float]] = None,
+                     straggler_factor: Optional[Callable[[str], float]] = None
+                     ) -> SimResult:
+    """Event-driven execution with in-flight rescheduling.
+
+    `planner` must provide:
+      initial_schedule() -> Schedule                (covers the full DAG)
+      on_completion(record, state) -> Optional[Schedule]
+    The planner observes every completion (feeding its online predictor);
+    when it returns a new Schedule, the not-yet-started frontier is
+    re-queued accordingly (booked/running tasks are never recalled).
+    """
+    loop = _EventLoop(dag, nodes, true_runtime, failures, straggler_factor)
+    sched = planner.initial_schedule()
+    loop.assigned_node.update(sched.assignment)
+    loop.set_queues(sched.order)
+    loop.start_all_runnable()
+    n_resched = 0
+    while True:
+        rec = loop.pop()
+        if rec is None:
+            break
+        new_sched = planner.on_completion(rec, loop.state(rec.finish))
+        if new_sched is not None:
+            n_resched += 1
+            # re-queue only the unbooked frontier; keep booked placements
+            for u, name in new_sched.assignment.items():
+                if u not in loop.started:
+                    loop.assigned_node[u] = name
+            loop.set_queues({
+                name: [u for u in uids if u not in loop.started]
+                for name, uids in new_sched.order.items()})
+        loop.start_all_runnable()
+    return loop.result(n_resched)
 
 
 def random_cluster(rng: np.random.Generator, pool: List[NodeSpec],

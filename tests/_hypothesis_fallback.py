@@ -1,0 +1,73 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite must run green from a fresh checkout with no network
+access, but four test modules use hypothesis property tests.  When the
+real library is importable we never get loaded (see conftest.py); when it
+is missing we register a minimal fake `hypothesis` module whose @given
+runs each property on a fixed, seeded sample of the strategy space.
+
+Only the tiny API surface the test-suite uses is provided:
+  given(**kwargs), settings(max_examples=, deadline=),
+  strategies.integers(lo, hi), strategies.floats(lo, hi).
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(*_a, max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # a plain zero-arg wrapper (no functools.wraps: pytest must not see
+        # the strategy params in the signature and resolve them as fixtures)
+        def wrapper():
+            rng = random.Random(0xC0FFEE)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for _ in range(n):
+                fn(**{k: s.example(rng) for k, s in strategies.items()})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the fake modules under the real names (idempotent)."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

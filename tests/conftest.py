@@ -7,6 +7,14 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# property tests degrade gracefully when hypothesis is not installed
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
 
 import jax
 import numpy as np
