@@ -22,7 +22,8 @@ def main(argv=None):
 
     from benchmarks import (carbon, cost, online_adaptation, prediction_error,
                             profiling_time, roofline_report,
-                            scheduling_makespan)
+                            scheduling_makespan, service_throughput,
+                            straggler_mitigation)
     jobs = {
         "prediction_error": lambda: prediction_error.run(),
         "profiling_time": lambda: profiling_time.run(),
@@ -31,11 +32,18 @@ def main(argv=None):
         "carbon": lambda: carbon.run(),
         "cost": lambda: cost.run(),
         "online_adaptation": lambda: online_adaptation.run(),
+        "service_throughput": lambda: service_throughput.run(),
+        "straggler_mitigation": lambda: straggler_mitigation.run(),
         "roofline": lambda: roofline_report.run(),
     }
+    full_only = {"straggler_mitigation"}
+    if args.only and args.only not in jobs:
+        ap.error(f"unknown benchmark {args.only!r}; known: {sorted(jobs)}")
     failures = 0
     for name, fn in jobs.items():
         if args.only and name != args.only:
+            continue
+        if not args.only and not args.full and name in full_only:
             continue
         print("=" * 78)
         print(f"== {name}")

@@ -1,0 +1,103 @@
+"""Micro-benchmark: prediction-serving throughput, scalar vs batched vs
+async-coalesced.
+
+Three ways to answer Q (task, node, input) runtime queries:
+  * scalar    — one `predictor.predict` per query (one JAX/numpy round
+                trip each): the pre-service baseline;
+  * batched   — one `PredictionService.predict_batch` call: a single
+                store gather + one predictive dispatch;
+  * async     — `AsyncPredictionFrontend`: C concurrent callers each
+                submit Q/C queries; the batch window coalesces them into
+                a handful of dispatches (callers never batch by hand).
+
+Reports queries/sec per path plus the dispatch count the front-end needed.
+
+  PYTHONPATH=src python -m benchmarks.service_throughput
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from benchmarks.common import build_experiment, fmt_table
+from repro.online import PredictionService
+from repro.online.events import PredictionQuery
+from repro.sched.cluster import TARGET_MACHINES
+from repro.store import AsyncPredictionFrontend, PosteriorStore
+
+
+def _make_queries(lot, n, seed):
+    rng = np.random.default_rng(seed)
+    tasks = lot.task_names()
+    nodes = [m.name for m in TARGET_MACHINES]
+    return [PredictionQuery(tasks[int(rng.integers(0, len(tasks)))],
+                            nodes[int(rng.integers(0, len(nodes)))],
+                            float(rng.uniform(0.05, 12.0)))
+            for _ in range(n)]
+
+
+def run(n_queries: int = 4096, n_callers: int = 16, n_scalar: int = 512,
+        repeats: int = 5, seed: int = 0, quiet: bool = False) -> dict:
+    exp = build_experiment("eager", training_set=0, seed=seed,
+                           methods=("lotaru-g",))
+    lot = exp.predictors["lotaru-g"]
+    queries = _make_queries(lot, n_queries, seed)
+    store = PosteriorStore()
+    svc = PredictionService(lot, exp.benches, store=store,
+                            tenant="bench", workflow="eager")
+    svc.predict_batch(queries[:64])              # warm caches / compiles
+
+    # scalar loop (subsampled: it is the slow path being replaced)
+    t0 = time.perf_counter()
+    for q in queries[:n_scalar]:
+        lot.predict(q.task, q.input_gb, exp.benches[q.node])
+    scalar_qps = n_scalar / (time.perf_counter() - t0)
+
+    # one batched service call
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        svc.predict_batch(queries)
+    batched_qps = repeats * n_queries / (time.perf_counter() - t0)
+
+    # async-coalesced: n_callers concurrent clients, window batching
+    chunk = n_queries // n_callers
+    chunks = [queries[i * chunk:(i + 1) * chunk] for i in range(n_callers)]
+    with AsyncPredictionFrontend(store, window_s=0.002) as fe:
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=n_callers) as pool:
+            for _ in range(repeats):
+                futs = list(pool.map(
+                    lambda qs: fe.predict_async(qs, tenant="bench",
+                                                workflow="eager"), chunks))
+                for f in futs:
+                    f.result(timeout=60)
+        async_s = time.perf_counter() - t0
+        dispatches = fe.dispatch_count
+    async_qps = repeats * chunk * n_callers / async_s
+
+    out = {"n_queries": n_queries, "n_callers": n_callers,
+           "scalar_qps": scalar_qps, "batched_qps": batched_qps,
+           "async_qps": async_qps, "async_dispatches": dispatches,
+           "async_caller_batches": repeats * n_callers,
+           "batched_speedup": batched_qps / scalar_qps,
+           "async_speedup": async_qps / scalar_qps}
+    if not quiet:
+        rows = [["scalar", f"{scalar_qps:,.0f}", "1.0x", "1 per query"],
+                ["batched", f"{batched_qps:,.0f}",
+                 f"{out['batched_speedup']:.1f}x", f"{repeats} total"],
+                [f"async x{n_callers} callers", f"{async_qps:,.0f}",
+                 f"{out['async_speedup']:.1f}x",
+                 f"{dispatches} for {out['async_caller_batches']} batches"]]
+        print(fmt_table(["path", "queries/s", "speedup", "dispatches"], rows,
+                        f"Serving throughput ({n_queries} queries)"))
+        print(f"\n[claim] batched >> scalar and async coalesces "
+              f"{out['async_caller_batches']} caller batches into "
+              f"{dispatches} dispatches -> "
+              f"{'PASS' if out['batched_speedup'] > 5 and dispatches < out['async_caller_batches'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

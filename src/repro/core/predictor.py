@@ -60,10 +60,14 @@ class LotaruPredictor:
         self.app_bench = dict(app_bench or {})
         self.threshold = threshold
         self.models: Dict[str, TaskRuntimeModel] = {}
+        self.version = 0              # bumped per fit: store bindings re-sync
+                                      # rows and drop factor caches on refit
 
     # ---- training -----------------------------------------------------------
     def fit(self, traces: Sequence[TraceRow]) -> "LotaruPredictor":
-        self._service = None          # posterior stack is stale after refit
+        self.version += 1             # store bindings full-resync on the
+                                      # bump, so the lazy service survives
+                                      # refits (no restack-from-scratch)
         by_task: Dict[str, List[TraceRow]] = {}
         for t in traces:
             by_task.setdefault(t.task, []).append(t)

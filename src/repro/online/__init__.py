@@ -2,9 +2,12 @@
 completions, a batched prediction service, and in-flight HEFT rescheduling.
 
 Layering: `events` is leaf-level (shared vocabulary), `predictor` wraps a
-fitted LotaruPredictor with exact conjugate updates, `service` batches
-(task, node, input) queries through the fused posterior-predictive kernel,
-`rescheduler` drives `workflow.simulator.execute_adaptive`.
+fitted LotaruPredictor with exact conjugate updates, `service` is a
+(tenant, workflow) view over the shared `repro.store.PosteriorStore`
+(stacked rows, copy-on-write snapshots, checkpointing) dispatching the
+fused posterior-predictive kernel, `rescheduler` drives
+`workflow.simulator.execute_adaptive`.  Multi-tenant coalescing lives in
+`repro.store.frontend.AsyncPredictionFrontend`.
 """
 from repro.online.events import TaskCompletion, PredictionQuery  # noqa: F401
 from repro.online.predictor import OnlinePredictor               # noqa: F401

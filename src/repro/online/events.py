@@ -1,9 +1,12 @@
-"""Event vocabulary of the online subsystem (leaf module: no repro deps
-beyond dataclasses, so the simulator and service can both speak it)."""
+"""Event vocabulary of the online subsystem (near-leaf module: depends
+only on `repro.store.keys`, so the simulator and service can both speak
+it)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
+
+from repro.store.keys import resolve_bench  # noqa: F401  (compat re-export)
 
 
 @dataclass(frozen=True)
@@ -24,15 +27,3 @@ class PredictionQuery:
     task: str
     node: Optional[str]       # None -> local machine (factor 1)
     input_gb: float
-
-
-def resolve_bench(benches, node: Optional[str]):
-    """Benchmark lookup shared by predictor and service: exact name first,
-    then the cluster-instance convention 'N2-3' -> 'N2'.  None when the
-    node is unknown (callers decide whether that is an error or a drop)."""
-    if node is None:
-        return None
-    b = benches.get(node)
-    if b is None and "-" in node:
-        b = benches.get(node.rsplit("-", 1)[0])
-    return b

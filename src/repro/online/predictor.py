@@ -108,8 +108,8 @@ class OnlinePredictor:
         self.base = base
         self.benches = dict(benches or {})
         self.threshold = threshold
-        self.version = 0                      # bumped on observe (service
-        self.node_stats: Dict[str, _NodeStats] = {}     # restack trigger)
+        self.version = 0                      # bumped on observe (store
+        self.node_stats: Dict[str, _NodeStats] = {}     # sync trigger)
         self.tasks: Dict[str, _TaskState] = {}
         self._service = None                  # lazy predict_rows service
         for task, m in base.models.items():
@@ -117,6 +117,11 @@ class OnlinePredictor:
                 m.correlated and m.posterior is not None) else None
             self.tasks[task] = _TaskState(nig=nig, median_s=m.median_s,
                                           spread_s=m.spread_s)
+        # non-destructive change feed: per-task last-change sequence numbers
+        # (store bindings each diff against their own cursor, so ONE
+        # predictor can feed any number of bindings/stores)
+        self._change_seq = 1
+        self._task_changes: Dict[str, int] = {t: 1 for t in self.tasks}
 
     # ---- prediction ---------------------------------------------------------
     @property
@@ -125,6 +130,23 @@ class OnlinePredictor:
 
     def task_names(self):
         return list(self.tasks)
+
+    def changed_since(self, cursor: float):
+        """-> (tasks whose posterior changed after `cursor`, new cursor).
+        Non-destructive: each PosteriorStore binding keeps its own cursor
+        and re-syncs only these rows instead of restacking every task on
+        each version bump.  A binding that fails to write simply keeps its
+        old cursor, so the rows stay due.  Covers load_state() rollbacks
+        too (loading bumps every task's change sequence)."""
+        seq = self._change_seq
+        if cursor >= seq:
+            return [], seq
+        return (sorted(t for t, s in self._task_changes.items()
+                       if s > cursor), seq)
+
+    def _mark_changed(self, task: str) -> None:
+        self._change_seq += 1
+        self._task_changes[task] = self._change_seq
 
     def export_posterior(self, task: str) -> dict:
         """predict_blr-compatible posterior (feeds the batched service)."""
@@ -209,8 +231,8 @@ class OnlinePredictor:
         #    merge task from downsampled profiles dwarfs any factor bias.
         if st.nig is not None:
             if is_remote:
-                self.version += 1
-                return
+                self.version += 1    # node correction moved, posterior not:
+                return               # no dirty row, no store COW write
             st.nig = bayes.nig_update(st.nig, comp.input_gb, comp.runtime_s)
             self._buffer(st, comp.input_gb, comp.runtime_s)
         else:
@@ -221,6 +243,7 @@ class OnlinePredictor:
             self._buffer(st, comp.input_gb, comp.runtime_s / max(f, 1e-6))
             self._update_median(st)
             self._maybe_promote(comp.task, st)
+        self._mark_changed(comp.task)   # posterior moved -> row resync due
         self.version += 1
 
     @staticmethod
@@ -260,3 +283,54 @@ class OnlinePredictor:
         """local predictive std (the uncertainty band rescheduling uses)."""
         _, std = bayes.predict_blr_np(self.export_posterior(task), input_gb)
         return float(std)
+
+    # ---- checkpoint (PosteriorStore save/resume) ----------------------------
+    def export_state(self) -> dict:
+        """JSON-serializable streaming state: NIG posteriors, median/MAD
+        states with their observation buffers, per-node correction logs.
+        Pure-python floats/lists only — json float repr round-trips float64
+        exactly, so save -> load_state is bit-identical."""
+        def _leaf(v):
+            return v.tolist() if isinstance(v, np.ndarray) else float(v)
+        tasks = {}
+        for name, st in self.tasks.items():
+            tasks[name] = {
+                "nig": ({k: _leaf(v) for k, v in st.nig.items()}
+                        if st.nig is not None else None),
+                "median_s": float(st.median_s),
+                "spread_s": float(st.spread_s),
+                "xs": [float(v) for v in st.xs],
+                "ys": [float(v) for v in st.ys]}
+        nodes = {name: {t: [float(v) for v in logs]
+                        for t, logs in s.logs_by_task.items()}
+                 for name, s in self.node_stats.items()}
+        return {"version": int(self.version), "threshold": float(self.threshold),
+                "tasks": tasks, "nodes": nodes}
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of export_state: overwrite ALL streaming state so a
+        restarted predictor resumes exactly where the checkpoint left off
+        (the fitted base model is reconstructed by the caller; everything
+        learned since fit time comes from here)."""
+        self.version = int(state["version"])
+        self.threshold = float(state["threshold"])
+        self.tasks = {}
+        for name, ts in state["tasks"].items():
+            nig = ts["nig"]
+            if nig is not None:
+                nig = {k: (np.asarray(v, np.float64) if isinstance(v, list)
+                           else float(v)) for k, v in nig.items()}
+            self.tasks[name] = _TaskState(
+                nig=nig, median_s=float(ts["median_s"]),
+                spread_s=float(ts["spread_s"]),
+                xs=[float(v) for v in ts["xs"]],
+                ys=[float(v) for v in ts["ys"]])
+        self.node_stats = {}
+        for node, by_task in state["nodes"].items():
+            s = _NodeStats()
+            s.logs_by_task = {t: [float(v) for v in logs]
+                              for t, logs in by_task.items()}
+            self.node_stats[node] = s
+        self._change_seq += 1        # every row is due for resync, on every
+        self._task_changes = {t: self._change_seq for t in self.tasks}
+        # binding's cursor (version may equal what a binding already synced)

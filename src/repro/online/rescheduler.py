@@ -35,9 +35,16 @@ class OnlineReschedulingPlanner:
     def __init__(self, dag: WorkflowDAG, nodes: List[NodeSpec],
                  online: OnlinePredictor,
                  benches: Optional[Mapping[str, MachineBench]] = None,
-                 z: float = 1.96, cooldown: int = 0):
+                 z: float = 1.96, cooldown: int = 0,
+                 store=None, tenant: str = "default",
+                 workflow: Optional[str] = None):
         """z: band half-width in predictive stds; cooldown: minimum
-        completions between two re-planning passes (0 = none)."""
+        completions between two re-planning passes (0 = none); store: a
+        shared PosteriorStore so several concurrent workflows/tenants serve
+        from one stack (each planner binds the namespace tenant/workflow,
+        defaulting workflow to dag.name — pass a run-unique workflow id
+        when executing the same workflow type concurrently, or a later
+        planner displaces the earlier one's binding)."""
         self.dag = dag
         self.nodes = nodes
         self.online = online
@@ -47,7 +54,9 @@ class OnlineReschedulingPlanner:
         # OnlinePredictor needs no benches arg (and a partial arg extends,
         # never shadows, what the predictor knows); z forwarded so the drift
         # band actually widens/narrows with the knob
-        self.service = PredictionService(online, online.benches, z=z)
+        self.service = PredictionService(online, online.benches, z=z,
+                                         store=store, tenant=tenant,
+                                         workflow=workflow or dag.name)
         self.z = z
         self.cooldown = cooldown
         self.stats = RescheduleStats()

@@ -1,90 +1,71 @@
-"""PredictionService: request batching over the fused predict kernel.
+"""PredictionService: one (tenant, workflow) serving view over the shared
+PosteriorStore.
 
 A scheduler planning T tasks on N nodes issues T x N runtime queries; the
 old path dispatched one predict_blr per query (a JAX dispatch per scalar —
-thousands of host round-trips per scheduling pass).  The service stacks
-every task posterior into contiguous arrays once (re-stacked lazily when
-the online predictor's version bumps), gathers per-query leaves, and
-evaluates means/stds for the whole batch in ONE call to
-`kernels.ops.bayes_predict` (Pallas on TPU, vmapped reference elsewhere).
-Extrapolation factors are deterministic scalar rescalings applied outside
-the kernel (cached per (task, node)).
+thousands of host round-trips per scheduling pass), and each service kept
+its own posterior stack, restacked wholesale on every predictor version
+bump.  The store owns the stacked float64 leaves now: the service binds
+its predictor to a namespace, pushes only *dirty* rows on sync
+(copy-on-write, one block touched per online update), gathers per-query
+rows from an immutable snapshot, and evaluates the whole batch in ONE call
+to the shared predictive path (Pallas on TPU, vectorized float64
+elsewhere).  Extrapolation factors are deterministic scalar rescalings
+applied outside the kernel, cached per predictor fit version in the
+binding (a refit can never serve stale factors).
+
+Many services — one per workflow/tenant — can share one store; the async
+front-end (`repro.store.frontend`) coalesces their concurrent queries into
+a single dispatch.
 
 Works with any predictor exposing `task_names() / export_posterior(task) /
 factor(task, bench)` — both LotaruPredictor and OnlinePredictor do.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bayes
 from repro.core.extrapolation import MachineBench
 from repro.core.traces import PredictionRow
-from repro.kernels import ops
-from repro.online.events import PredictionQuery, resolve_bench
-
-_LEAVES = ("mu", "sigma", "beta_prec", "x_mu", "x_sd", "y_mu", "y_sd")
+from repro.online.events import PredictionQuery
+from repro.store import (DEFAULT_TENANT, DEFAULT_WORKFLOW, PosteriorStore,
+                         TenantBinding)
+from repro.store.compute import finalize, predict_stacked
 
 
 class PredictionService:
     def __init__(self, predictor,
                  benches: Optional[Mapping[str, MachineBench]] = None,
-                 z: float = 1.96, impl: str = "auto"):
+                 z: float = 1.96, impl: str = "auto",
+                 store: Optional[PosteriorStore] = None,
+                 tenant: str = DEFAULT_TENANT,
+                 workflow: str = DEFAULT_WORKFLOW):
         self.predictor = predictor
-        self.benches = dict(benches or {})
         self.z = z
         self.impl = impl
-        self._stack: Dict[str, np.ndarray] = {}
-        self._index: Dict[str, int] = {}
-        self._factor_cache: Dict[Tuple[str, str], float] = {}
-        self._version = -1
-        self.refresh()
+        self.store = store if store is not None else PosteriorStore()
+        self._binding: TenantBinding = self.store.bind(tenant, workflow,
+                                                       predictor, benches)
+        # shared with the binding so predict_rows' setdefault and the
+        # front-end's factor path see one registry
+        self.benches = self._binding.benches
 
-    # ---- posterior stacking -------------------------------------------------
-    def _current_version(self) -> int:
-        return getattr(self.predictor, "version", 0)
+    # ---- posterior sync -----------------------------------------------------
+    @property
+    def tenant(self) -> str:
+        return self._binding.tenant
+
+    @property
+    def workflow(self) -> str:
+        return self._binding.workflow
 
     def refresh(self) -> None:
-        """Restack posterior leaves (cheap: one small array per abstract
-        task — T is the number of task *models*, not DAG vertices).  The
-        factor cache survives: it holds only the static extrapolation
-        factors; streaming node corrections are applied at query time."""
-        tasks = list(self.predictor.task_names())
-        posts = [self.predictor.export_posterior(t) for t in tasks]
-        self._index = {t: i for i, t in enumerate(tasks)}
-        # float64 stack: the CPU predict path must reproduce the scalar
-        # path exactly, including full-precision medians from
-        # constant_posterior; the TPU kernel path downcasts at its boundary
-        self._stack = {k: np.stack([np.asarray(p[k], np.float64)
-                                    for p in posts]) for k in _LEAVES}
-        self._version = self._current_version()
-
-    def _maybe_refresh(self) -> None:
-        if self._version != self._current_version():
-            self.refresh()
-
-    def _bench(self, node: Optional[str]) -> Optional[MachineBench]:
-        return resolve_bench(self.benches, node)
-
-    def _base_factor(self, task: str, node: Optional[str]) -> float:
-        """static Section 4.6 factor, cacheable forever (corrections from
-        streaming observations are composed on top per query)."""
-        if node is None:
-            return 1.0                 # local machine (events.py contract)
-        key = (task, node)
-        f = self._factor_cache.get(key)
-        if f is None:
-            bench = self._bench(node)
-            if bench is None:
-                raise KeyError(f"no benchmark registered for node {node!r}; "
-                               f"known: {sorted(self.benches)}")
-            base = getattr(self.predictor, "base", self.predictor)
-            f = base.factor(task, bench)
-            self._factor_cache[key] = f
-        return f
+        """Force a full restack of this namespace's rows and drop the
+        factor cache (incremental dirty-row sync happens automatically on
+        every predict; refresh() is for out-of-band model edits)."""
+        self._binding.sync(full=True)
 
     # ---- batched prediction -------------------------------------------------
     def predict_batch(self, queries: Sequence[PredictionQuery]
@@ -92,31 +73,12 @@ class PredictionService:
         """-> (Q, 3) array of [mean, lower, upper] seconds."""
         if not queries:
             return np.zeros((0, 3), np.float32)
-        self._maybe_refresh()
-        idx = np.asarray([self._index[q.task] for q in queries], np.int64)
+        self._binding.sync()
+        snap = self.store.snapshot()
+        post = snap.gather([self._binding.key_str(q.task) for q in queries])
         x = np.asarray([q.input_gb for q in queries])
-        if self.impl in ("pallas", "interpret") or (
-                self.impl == "auto" and ops._on_tpu()):
-            post = {k: jnp.asarray(v[idx]) for k, v in self._stack.items()}
-            mean, std = ops.bayes_predict(jnp.asarray(x, jnp.float32), post,
-                                          impl=self.impl)
-            mean = np.asarray(mean, np.float64)
-            std = np.asarray(std, np.float64)
-        else:
-            # off-TPU: the same float64 elementwise math as the scalar path,
-            # vectorized — bit-identical to per-query predict_blr_np
-            post = {k: v[idx] for k, v in self._stack.items()}
-            mean, std = bayes.predict_blr_np(post, x)
-        corr_fn = getattr(self.predictor, "node_correction", None)
-        corr = ({n: corr_fn(n) for n in {q.node for q in queries}}
-                if corr_fn else {})
-        f = np.asarray([self._base_factor(q.task, q.node)
-                        * corr.get(q.node, 1.0) for q in queries])
-        mean = np.maximum(mean, 1e-3) * f
-        std = std * f
-        lower = np.maximum(mean - self.z * std, 0.0)
-        upper = mean + self.z * std
-        return np.stack([mean, lower, upper], axis=1)
+        mean, std = predict_stacked(x, post, impl=self.impl)
+        return finalize(mean, std, self._binding.factors(queries), self.z)
 
     def predict_rows(self, dag_tasks, targets: Sequence[MachineBench],
                      workflow: str) -> List[PredictionRow]:

@@ -1,0 +1,461 @@
+"""PosteriorStore: the single multi-tenant owner of all posterior state.
+
+Before this layer, every predictor kept posteriors in its own dict and
+every `PredictionService` re-stacked ALL of them whenever a version counter
+moved — one stack per workflow, state lost on restart, batching by hand.
+The store centralizes that:
+
+  * **Namespaced keys** — rows are addressed `tenant/workflow/task`
+    (keys.TaskKey); any number of workflows/tenants share one store with
+    hard isolation (a write touches exactly one row).
+  * **Contiguous blocks + copy-on-write snapshots** — leaves live in
+    fixed-size float64 blocks (`block_size` rows).  A write copies only the
+    touched block and bumps the store generation; readers gather from an
+    immutable `StoreSnapshot`, so the old "restack everything on every
+    version bump" disappears — an online update rewrites one row of one
+    block.
+  * **Shard-aware layout** — when the stack outgrows one block the store
+    splits into more blocks; `gather` resolves rows block-by-block, so a
+    deployment can place blocks on different hosts without changing the
+    read path.
+  * **Checkpoint/restore** — `save()` writes the blocks (npz) plus a JSON
+    manifest with the key index and each bound predictor's streaming state
+    (NIG posteriors, node-correction logs, observation buffers);
+    `restore()` + `resume()` bring a restarted service back warm and
+    bit-identical.
+
+`TenantBinding` is the per-namespace glue: it owns the sync cursor between
+a predictor's mutable state and the store rows (incremental via the
+predictor's non-destructive change feed, `changed_since(cursor)`, so one
+predictor can feed many bindings) and the version-scoped static-factor
+cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.store.compute import LEAF_SHAPES, LEAVES
+from repro.store.keys import (DEFAULT_TENANT, DEFAULT_WORKFLOW, TaskKey,
+                              namespace_str, resolve_bench)
+
+DEFAULT_BLOCK_SIZE = 512
+MANIFEST_NAME = "manifest.json"
+BLOCKS_NAME = "blocks.npz"
+CHECKPOINT_FORMAT = 1
+
+# scale-like leaves default to 1 in unassigned slots so a stray read can
+# never divide by zero (assigned-row reads are guarded by the snapshot)
+_UNIT_LEAVES = ("beta_prec", "x_sd", "y_sd")
+
+
+def _new_block(block_size: int) -> Dict[str, np.ndarray]:
+    blk = {}
+    for leaf, shape in LEAF_SHAPES.items():
+        fill = 1.0 if leaf in _UNIT_LEAVES else 0.0
+        blk[leaf] = np.full((block_size,) + shape, fill, np.float64)
+    return blk
+
+
+class StoreSnapshot:
+    """Immutable view of the store at one generation.
+
+    Writers replace whole blocks (copy-on-write), so holding references to
+    the block arrays is enough; the live key index is shared and guarded by
+    `n_rows` (keys are append-only — a key assigned after the snapshot maps
+    to a row the snapshot refuses to serve)."""
+
+    __slots__ = ("_blocks", "_rows", "_n_rows", "_block_size", "generation")
+
+    def __init__(self, blocks, rows, n_rows, block_size, generation):
+        self._blocks = tuple(blocks)
+        self._rows = rows
+        self._n_rows = n_rows
+        self._block_size = block_size
+        self.generation = generation
+
+    def __contains__(self, key) -> bool:
+        row = self._rows.get(str(key))
+        return row is not None and row < self._n_rows
+
+    def row_of(self, key) -> int:
+        row = self._rows.get(str(key))
+        if row is None or row >= self._n_rows:
+            raise KeyError(str(key))
+        return row
+
+    def gather(self, keys: Sequence) -> Dict[str, np.ndarray]:
+        """Stack the posterior leaves of `keys` -> {leaf: (Q, ...)}.
+        Rows are resolved block-by-block: with one block this is a single
+        fancy index per leaf; with a sharded stack each block is touched at
+        most once."""
+        rows = np.asarray([self.row_of(k) for k in keys], np.int64)
+        bids, slots = np.divmod(rows, self._block_size)
+        out = {}
+        for leaf in LEAVES:
+            res = np.empty((len(rows),) + LEAF_SHAPES[leaf], np.float64)
+            for b in np.unique(bids):
+                m = bids == b
+                res[m] = self._blocks[b][leaf][slots[m]]
+            out[leaf] = res
+        return out
+
+    def get(self, key) -> Dict[str, np.ndarray]:
+        """One row's leaves (copies), as a predict_blr-compatible dict."""
+        g = self.gather([key])
+        return {leaf: v[0] for leaf, v in g.items()}
+
+
+class TenantBinding:
+    """One (tenant, workflow) namespace bound to the predictor that updates
+    it.  Owns (a) the sync cursor — store rows are refreshed incrementally
+    from the predictor's change feed instead of restacked wholesale — and
+    (b) the static-factor cache, scoped to the *base* predictor's fit
+    version so a refit (changed `cpu_fraction`, swapped `app_bench`) can
+    never serve factors computed for the previous model."""
+
+    def __init__(self, store: "PosteriorStore", tenant: str, workflow: str,
+                 predictor, benches: Optional[Mapping] = None):
+        self.store = store
+        self.tenant = tenant
+        self.workflow = workflow
+        self.predictor = predictor
+        self.benches = dict(benches or {})
+        self._detached = False           # set when another predictor takes
+        self._synced_version: Optional[int] = None   # the namespace over
+        self._change_cursor = -1.0       # this binding's position in the
+        self._sync_lock = threading.Lock()   # predictor's change feed
+        self._keys: Dict[str, TaskKey] = {}       # task -> key (hot-path
+        self._key_strs: Dict[str, str] = {}       # memo: tenant/workflow
+                                                  # are fixed per binding)
+        self._factor_cache: Dict[Tuple[str, str], float] = {}
+        self._factor_version: Optional[int] = None
+
+    @property
+    def namespace(self) -> str:
+        return namespace_str(self.tenant, self.workflow)
+
+    def key(self, task: str) -> TaskKey:
+        k = self._keys.get(task)
+        if k is None:
+            k = self._keys[task] = TaskKey(self.tenant, self.workflow, task)
+        return k
+
+    def key_str(self, task: str) -> str:
+        """Memoized str(key) — the per-query handle the serving hot path
+        passes to snapshot gathers (avoids a dataclass + join per query)."""
+        s = self._key_strs.get(task)
+        if s is None:
+            s = self._key_strs[task] = str(self.key(task))
+        return s
+
+    def keys(self) -> List[TaskKey]:
+        return [self.key(t) for t in self.predictor.task_names()]
+
+    def add_benches(self, benches: Mapping) -> None:
+        """Merge benchmark entries; replacing an existing node's bench with
+        a different reading drops the factor cache (factors derived from
+        the old bench must not survive a re-benchmark)."""
+        changed = any(k in self.benches and self.benches[k] != v
+                      for k, v in benches.items())
+        self.benches.update(benches)
+        if changed:
+            self._factor_cache.clear()
+
+    # ---- predictor -> store sync -------------------------------------------
+    def sync(self, full: bool = False) -> int:
+        """Push posterior rows the predictor changed since the last sync
+        into the store.  Returns the number of rows written.  `full` forces
+        a complete rewrite (explicit `refresh()`), which also drops the
+        factor cache so even out-of-band model edits (a swapped app_bench)
+        are picked up."""
+        p = self.predictor
+        with self._sync_lock:       # serialize concurrent syncs (frontend
+            if self._detached:      # checked under the lock: bind() detaches
+                # under this same lock, so an in-flight sync either lands
+                # its rows BEFORE the displacing full restack or dies here
+                raise RuntimeError(
+                    f"binding for {self.namespace!r} was displaced by a "
+                    f"later bind() of a different predictor; services "
+                    f"holding it must be rebuilt (two live updaters would "
+                    f"silently alternate overwriting the same rows)")
+            version = getattr(p, "version", 0)   # worker vs predict_batch:
+            # a sync in one thread must land its put before another thread
+            # concludes the namespace is clean and snapshots stale rows
+            changed_since = getattr(p, "changed_since", None)
+            cursor: Optional[float] = None
+            if full or self._synced_version is None:
+                if changed_since is not None:    # capture the feed position
+                    _, cursor = changed_since(float("inf"))   # BEFORE export
+                tasks = list(p.task_names())
+            elif changed_since is not None:
+                # the feed is non-destructive and per-binding (cursor), so
+                # one predictor can feed many bindings; a failed put keeps
+                # the old cursor and the rows stay due
+                tasks, cursor = changed_since(self._change_cursor)
+            else:
+                tasks = ([] if self._synced_version == version
+                         else list(p.task_names()))
+            if tasks:
+                self.store.put_many([(self.key(t), p.export_posterior(t))
+                                     for t in tasks])
+            if cursor is not None:
+                self._change_cursor = cursor
+            self._synced_version = version
+            base = getattr(p, "base", p)
+            base_version = getattr(base, "version", 0)
+            if full or base_version != self._factor_version:
+                self._factor_cache.clear()
+                self._factor_version = base_version
+            return len(tasks)
+
+    # ---- extrapolation factors ----------------------------------------------
+    def base_factor(self, task: str, node: Optional[str]) -> float:
+        """Static Section 4.6 factor, cached per base-predictor version
+        (streaming node corrections are composed on top per query)."""
+        if node is None:
+            return 1.0                 # local machine (events.py contract)
+        cache_key = (task, node)
+        f = self._factor_cache.get(cache_key)
+        if f is None:
+            bench = resolve_bench(self.benches, node)
+            if bench is None:
+                raise KeyError(f"no benchmark registered for node {node!r}; "
+                               f"known: {sorted(self.benches)}")
+            base = getattr(self.predictor, "base", self.predictor)
+            f = base.factor(task, bench)
+            self._factor_cache[cache_key] = f
+        return f
+
+    def factors(self, queries) -> np.ndarray:
+        """Per-query multiplicative factor: static extrapolation x the
+        predictor's streaming node correction (if it has one)."""
+        corr_fn = getattr(self.predictor, "node_correction", None)
+        corr = ({n: corr_fn(n) for n in {q.node for q in queries}}
+                if corr_fn else {})
+        return np.asarray([self.base_factor(q.task, q.node)
+                           * corr.get(q.node, 1.0) for q in queries])
+
+
+class PosteriorStore:
+    """See module docstring.  Thread-safe for concurrent put/snapshot."""
+
+    def __init__(self, block_size: int = DEFAULT_BLOCK_SIZE):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.block_size = int(block_size)
+        self.generation = 0
+        self._lock = threading.RLock()
+        self._rows: Dict[str, int] = {}          # key str -> row (append-only)
+        self._next_row = 0                       # allocation cursor (> any
+                                                 # restored row index)
+        self._blocks: List[Dict[str, np.ndarray]] = []
+        self._bindings: Dict[Tuple[str, str], TenantBinding] = {}
+        self._saved_states: Dict[str, dict] = {}  # namespace -> checkpointed
+        self._snap: Optional[StoreSnapshot] = None  # predictor stream state
+
+    # ---- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self._blocks)
+
+    def task_keys(self) -> List[str]:
+        with self._lock:
+            return list(self._rows)
+
+    def namespaces(self) -> List[str]:
+        with self._lock:
+            return [b.namespace for b in self._bindings.values()]
+
+    # ---- namespace bindings -------------------------------------------------
+    def binding(self, tenant: str = DEFAULT_TENANT,
+                workflow: str = DEFAULT_WORKFLOW) -> Optional[TenantBinding]:
+        with self._lock:
+            return self._bindings.get((tenant, workflow))
+
+    def bind(self, tenant: str, workflow: str, predictor,
+             benches: Optional[Mapping] = None, sync: bool = True
+             ) -> TenantBinding:
+        """Attach `predictor` as the updater of namespace tenant/workflow.
+        Re-binding the same predictor returns the existing binding (benches
+        merge; a replaced bench reading drops cached factors); a different
+        predictor takes the namespace over and fully restacks it."""
+        while True:
+            with self._lock:
+                old = self._bindings.get((tenant, workflow))
+                if old is not None and old.predictor is predictor:
+                    if benches:
+                        old.add_benches(benches)
+                    return old
+                if old is None:
+                    b = TenantBinding(self, tenant, workflow, predictor,
+                                      benches)
+                    self._bindings[(tenant, workflow)] = b
+                    break
+            # displacement: detach the old updater under ITS sync lock (and
+            # outside the store lock — its in-flight sync may need put_many)
+            # so any in-flight sync finishes BEFORE our full restack and no
+            # later one can write rows again
+            with old._sync_lock:
+                old._detached = True
+            with self._lock:
+                if self._bindings.get((tenant, workflow)) is old:
+                    b = TenantBinding(self, tenant, workflow, predictor,
+                                      benches)
+                    self._bindings[(tenant, workflow)] = b
+                    break
+                # another thread re-bound concurrently; re-evaluate
+        if sync:
+            b.sync(full=True)
+        return b
+
+    # ---- writes (copy-on-write) ---------------------------------------------
+    def put(self, key, post: Mapping) -> None:
+        self.put_many([(key, post)])
+
+    def put_many(self, items: Sequence[Tuple[object, Mapping]]) -> None:
+        """Write posterior rows in one generation bump.  Only the touched
+        blocks are copied; blocks held by live snapshots are never mutated.
+        Atomic: keys and leaves are validated/staged up front, so a
+        malformed posterior raises before any row, block, or generation
+        state changes (no phantom rows, no stale cached snapshot)."""
+        if not items:
+            return
+        staged = []
+        for key, post in items:
+            ks = str(key)
+            leaves = {}
+            for leaf in LEAVES:
+                v = np.asarray(post[leaf], np.float64)
+                if v.shape != LEAF_SHAPES[leaf]:
+                    raise ValueError(f"leaf {leaf!r} of {ks!r} has shape "
+                                     f"{v.shape}, want {LEAF_SHAPES[leaf]}")
+                leaves[leaf] = v
+            staged.append((ks, leaves))
+        with self._lock:
+            for ks, _ in staged:
+                if ks not in self._rows:
+                    TaskKey.parse(ks)            # validate shape of new keys
+            fresh = set()
+            touched: Dict[int, List[Tuple[int, dict]]] = {}
+            for ks, leaves in staged:
+                row = self._rows.get(ks)
+                if row is None:
+                    row = self._next_row       # never len(_rows): restored
+                    self._next_row += 1        # manifests may have row ids
+                    self._rows[ks] = row       # beyond the key count
+                bid, slot = divmod(row, self.block_size)
+                while bid >= len(self._blocks):
+                    self._blocks.append(_new_block(self.block_size))
+                    fresh.add(len(self._blocks) - 1)
+                touched.setdefault(bid, []).append((slot, leaves))
+            for bid, writes in touched.items():
+                block = self._blocks[bid]
+                if bid not in fresh:             # copy-on-write
+                    block = {k: v.copy() for k, v in block.items()}
+                for slot, leaves in writes:
+                    for leaf, v in leaves.items():
+                        block[leaf][slot] = v
+                self._blocks[bid] = block
+            self.generation += 1
+            self._snap = None
+
+    # ---- reads --------------------------------------------------------------
+    def snapshot(self) -> StoreSnapshot:
+        with self._lock:
+            if self._snap is None:
+                self._snap = StoreSnapshot(self._blocks, self._rows,
+                                           self._next_row, self.block_size,
+                                           self.generation)
+            return self._snap
+
+    def get(self, key) -> Dict[str, np.ndarray]:
+        return self.snapshot().get(key)
+
+    def gather(self, keys: Sequence) -> Dict[str, np.ndarray]:
+        return self.snapshot().gather(keys)
+
+    # ---- checkpoint / restore -----------------------------------------------
+    def save(self, path: str) -> str:
+        """Write blocks (npz) + manifest (JSON): key index, generation, and
+        each bound predictor's streaming state via `export_state()` (NIG
+        posteriors, node-correction logs, observation buffers).  JSON float
+        repr round-trips float64 exactly, so restore is bit-identical."""
+        os.makedirs(path, exist_ok=True)
+        with self._lock:
+            bindings = list(self._bindings.values())
+        for b in bindings:
+            b.sync()       # rows must agree with the exported stream state:
+                           # an observe() with no predict since must not
+                           # checkpoint new state over a pre-observe row
+        with self._lock:
+            arrays = {f"b{i}__{leaf}": blk[leaf]
+                      for i, blk in enumerate(self._blocks) for leaf in LEAVES}
+            # start from restored-but-not-resumed namespace states so a
+            # partial resume + re-save never drops another tenant's
+            # checkpointed streaming state; live bindings overwrite theirs
+            states = dict(self._saved_states)
+            for b in self._bindings.values():
+                exp = getattr(b.predictor, "export_state", None)
+                states[b.namespace] = exp() if exp is not None else None
+            manifest = {"format": CHECKPOINT_FORMAT,
+                        "block_size": self.block_size,
+                        "generation": self.generation,
+                        "rows": dict(self._rows),
+                        "namespaces": states}
+        np.savez(os.path.join(path, BLOCKS_NAME), **arrays)
+        with open(os.path.join(path, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f)
+        return path
+
+    @classmethod
+    def restore(cls, path: str) -> "PosteriorStore":
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != CHECKPOINT_FORMAT:
+            raise ValueError(f"unsupported checkpoint format in {path!r}: "
+                             f"{manifest.get('format')!r}")
+        store = cls(block_size=manifest["block_size"])
+        rows = {k: int(v) for k, v in manifest["rows"].items()}
+        if rows:
+            vals = list(rows.values())
+            if min(vals) < 0 or len(set(vals)) != len(vals):
+                raise ValueError(f"manifest rows must be unique and >= 0 "
+                                 f"(checkpoint {path!r})")
+        store._rows = rows
+        store._next_row = max(rows.values()) + 1 if rows else 0
+        n_blocks = -(-store._next_row // store.block_size)
+        with np.load(os.path.join(path, BLOCKS_NAME)) as z:
+            store._blocks = [{leaf: (np.array(z[f"b{i}__{leaf}"], np.float64)
+                                     if f"b{i}__{leaf}" in z.files
+                                     else _new_block(store.block_size)[leaf])
+                              for leaf in LEAVES} for i in range(n_blocks)]
+        store.generation = int(manifest["generation"])
+        store._saved_states = manifest.get("namespaces") or {}
+        return store
+
+    def resume(self, tenant: str, workflow: str, predictor,
+               benches: Optional[Mapping] = None) -> TenantBinding:
+        """Re-attach a freshly constructed predictor to its checkpointed
+        namespace.  For predictors with `export_state`/`load_state`
+        (OnlinePredictor) the streaming state is loaded back and the first
+        sync rewrites the rows from it bit-identically — a restarted
+        service reproduces pre-restart predictions exactly.  A predictor
+        without `load_state` (plain LotaruPredictor) restacks from its own
+        fit on first predict: the checkpointed rows only persist if the
+        predictor was rebuilt equivalently."""
+        state = self._saved_states.get(namespace_str(tenant, workflow))
+        if state is not None and hasattr(predictor, "load_state"):
+            predictor.load_state(state)
+        # bind without pinning the sync cursor: the first predict re-syncs
+        # every row from the restored state (bit-identical to the stored
+        # blocks when the checkpoint was consistent, and self-repairing
+        # when it was not — e.g. a manifest written by an external tool)
+        return self.bind(tenant, workflow, predictor, benches, sync=False)
