@@ -1,0 +1,115 @@
+"""Replan-latency benchmark: what one in-flight replanning round costs
+before and after the decision plane.
+
+Scenario: a 100-task x 20-node frontier replan — the round
+`online.rescheduler` runs on every drift event.  Two implementations of
+the same decision:
+
+  * scalar-callback — the pre-plane path: `heft_schedule_reference` pulls
+    every (task, node) runtime through its own `PredictionService` call,
+    so one replan costs O(T x N) store syncs + gathers + predictive
+    dispatches (plus extra calls per placement candidate);
+  * matrix — the decision plane: ONE `predict_matrix` dispatch
+    materializes the (T, N) mean/std arrays, then the vectorized NumPy
+    HEFT core ranks and places off them.
+
+Both paths run the same finalize arithmetic, so the schedules must be
+bit-identical — the benchmark asserts that before it times anything.
+
+  PYTHONPATH=src python -m benchmarks.replan_latency
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.microbench import simulate_microbench
+from repro.core.predictor import LotaruPredictor
+from repro.core.traces import TraceRow
+from repro.online import PredictionService
+from repro.online.events import PredictionQuery
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+from repro.sched.heft import heft_schedule_matrix, heft_schedule_reference
+from repro.sched.plane import PredictionMatrix
+from repro.workflow.dag import TaskInstance, WorkflowDAG
+from repro.workflow.simulator import random_cluster
+
+TASK_TYPES = ("bwa", "idx", "dedup", "qc", "merge", "report")
+
+
+def _build(n_tasks: int, n_nodes: int, seed: int):
+    rng = np.random.default_rng(seed)
+    traces = []
+    for j, t in enumerate(TASK_TYPES):
+        traces += [TraceRow("wf", t, "local", s,
+                            2.0 + j + (15.0 + 6 * j) * s)
+                   for s in np.linspace(0.05, 0.4, 6)]
+    lot = LotaruPredictor("G",
+                          local_bench=simulate_microbench(LOCAL, 1))
+    lot.fit(traces)
+    nodes = random_cluster(rng, list(TARGET_MACHINES), n_nodes=n_nodes)
+    benches = {n.name: simulate_microbench(n, 1) for n in nodes}
+    svc = PredictionService(lot, benches)
+    dag = WorkflowDAG("replan")
+    for i in range(n_tasks):
+        deps = [f"t{j}" for j in range(i)
+                if rng.random() < min(3.0 / max(i, 1), 0.5)]
+        dag.add(TaskInstance(f"t{i}", TASK_TYPES[i % len(TASK_TYPES)],
+                             "replan", float(rng.uniform(0.05, 4.0)),
+                             output_gb=float(rng.uniform(0.0, 2.0)),
+                             deps=deps))
+    return dag, nodes, svc
+
+
+def run(n_tasks: int = 100, n_nodes: int = 20, seed: int = 0,
+        repeats: int = 5, quiet: bool = False) -> dict:
+    dag, nodes, svc = _build(n_tasks, n_nodes, seed)
+
+    def scalar_predict(uid, node):
+        t = dag.tasks[uid]
+        return float(svc.predict_batch(
+            [PredictionQuery(t.task_name, node.name, t.input_gb)])[0][0])
+
+    entries = [(u, dag.tasks[u].task_name, dag.tasks[u].input_gb)
+               for u in dag.tasks]
+
+    def matrix_round():
+        mat = PredictionMatrix.from_service(svc, entries, nodes)
+        return heft_schedule_matrix(dag, nodes, mat)
+
+    # correctness first: the two paths must produce the same schedule
+    ref = heft_schedule_reference(dag, nodes, scalar_predict)
+    vec = matrix_round()
+    parity = (ref.assignment == vec.assignment and ref.est == vec.est)
+    assert parity, "matrix replan diverged from the scalar reference"
+
+    # best-of-repeats on BOTH sides, so a transient stall in either path
+    # cannot skew the reported ratio
+    scalar_s = min(_timed(lambda: heft_schedule_reference(
+        dag, nodes, scalar_predict)) for _ in range(repeats))
+    matrix_s = min(_timed(matrix_round) for _ in range(repeats))
+    speedup = scalar_s / matrix_s
+    out = {"n_tasks": n_tasks, "n_nodes": n_nodes,
+           "scalar_callback_s": scalar_s, "matrix_s": matrix_s,
+           "speedup": speedup, "bit_parity": parity,
+           "predicted_makespan_s": vec.predicted_makespan}
+    if not quiet:
+        print(f"Replan round ({n_tasks} tasks x {n_nodes} nodes): "
+              f"scalar-callback {scalar_s * 1e3:.1f} ms, "
+              f"matrix {matrix_s * 1e3:.1f} ms -> {speedup:.1f}x")
+        print(f"[claim] one-dispatch matrix replan >= 5x faster -> "
+              f"{'PASS' if speedup >= 5.0 else 'FAIL'}")
+        print(f"[claim] bit-identical schedules -> "
+              f"{'PASS' if parity else 'FAIL'}")
+    return out
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    run()

@@ -15,13 +15,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (200 scheduling clusters)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (carbon, cost, online_adaptation, prediction_error,
-                            profiling_time, roofline_report,
+                            profiling_time, replan_latency, roofline_report,
                             scheduling_makespan, service_throughput,
                             straggler_mitigation)
     jobs = {
@@ -34,14 +35,17 @@ def main(argv=None):
         "online_adaptation": lambda: online_adaptation.run(),
         "service_throughput": lambda: service_throughput.run(),
         "straggler_mitigation": lambda: straggler_mitigation.run(),
+        "replan_latency": lambda: replan_latency.run(),
         "roofline": lambda: roofline_report.run(),
     }
     full_only = {"straggler_mitigation"}
-    if args.only and args.only not in jobs:
-        ap.error(f"unknown benchmark {args.only!r}; known: {sorted(jobs)}")
+    only = set(args.only.split(",")) if args.only else None
+    if only and only - set(jobs):
+        ap.error(f"unknown benchmark(s) {sorted(only - set(jobs))}; "
+                 f"known: {sorted(jobs)}")
     failures = 0
     for name, fn in jobs.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         if not args.only and not args.full and name in full_only:
             continue

@@ -8,6 +8,12 @@ last planning pass (|new - ref| > z * ref_std), the frontier is re-planned
 with HEFT under the updated posteriors — running tasks keep their nodes,
 data already produced constrains ready times (finish + comm from the
 producing node to each candidate).
+
+Every planning pass goes through the decision plane: ONE
+`PredictionService.predict_matrix` dispatch materializes the
+tasks x nodes `PredictionMatrix` that the vectorized HEFT core, the drift
+bands, and the speculation policy all read — no per-(task, node) scalar
+callbacks anywhere in the replan path.
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ from repro.core.microbench import NodeSpec
 from repro.online.events import PredictionQuery, TaskCompletion
 from repro.online.predictor import OnlinePredictor
 from repro.online.service import PredictionService
-from repro.sched.heft import Schedule, comm_seconds, heft_schedule
+from repro.sched.heft import Schedule, comm_seconds, heft_schedule_matrix
+from repro.sched.plane import PredictionMatrix, TaskDistribution
+from repro.sched.straggler import SpeculationDecision, decide_speculation
 from repro.workflow.dag import TaskInstance, WorkflowDAG
 from repro.workflow.simulator import ExecRecord, SimState
 
@@ -37,14 +45,17 @@ class OnlineReschedulingPlanner:
                  benches: Optional[Mapping[str, MachineBench]] = None,
                  z: float = 1.96, cooldown: int = 0,
                  store=None, tenant: str = "default",
-                 workflow: Optional[str] = None):
+                 workflow: Optional[str] = None,
+                 quantile: Optional[float] = None):
         """z: band half-width in predictive stds; cooldown: minimum
         completions between two re-planning passes (0 = none); store: a
         shared PosteriorStore so several concurrent workflows/tenants serve
         from one stack (each planner binds the namespace tenant/workflow,
         defaulting workflow to dag.name — pass a run-unique workflow id
         when executing the same workflow type concurrently, or a later
-        planner displaces the earlier one's binding)."""
+        planner displaces the earlier one's binding); quantile: schedule on
+        the pessimistic mean + z*std at this quantile instead of the mean
+        (uncertainty-aware HEFT)."""
         self.dag = dag
         self.nodes = nodes
         self.online = online
@@ -59,47 +70,46 @@ class OnlineReschedulingPlanner:
                                          workflow=workflow or dag.name)
         self.z = z
         self.cooldown = cooldown
+        self.quantile = quantile
         self.stats = RescheduleStats()
         self._since_resched = 10 ** 9
         # uid -> (ref mean, ref std) on its currently-assigned node
         self._band: Dict[str, Tuple[float, float]] = {}
         self._assignment: Dict[str, str] = {}
+        # last-planned matrix rows per uid (means/stds over all nodes) —
+        # what the speculation policy reads for running tasks
+        self._dist_rows: Dict[str, TaskDistribution] = {}
 
     # ---- batched prediction matrix ------------------------------------------
-    def _prediction_matrix(self, uids) -> Dict[str, Dict[str, Tuple[float,
-                                                                    float]]]:
-        """(mean, std) for every (uid, node) in ONE service call — each
-        planning pass costs one batched kernel dispatch, not T x N scalar
-        predicts (w_avg + placement loop in HEFT both read from this)."""
+    def _prediction_matrix(self, uids) -> PredictionMatrix:
+        """The decision-plane matrix for `uids` x nodes in ONE batched
+        dispatch — each planning pass costs one store gather + one
+        predictive kernel call, not T x N scalar predicts (rank +
+        placement + bands + speculation all read from this)."""
         uids = list(uids)
-        queries = [PredictionQuery(self.dag.tasks[u].task_name, n.name,
-                                   self.dag.tasks[u].input_gb)
-                   for u in uids for n in self.nodes]
-        out = self.service.predict_batch(queries)
-        mat: Dict[str, Dict[str, Tuple[float, float]]] = {}
-        i = 0
+        mat = PredictionMatrix.from_service(
+            self.service,
+            [(u, self.dag.tasks[u].task_name, self.dag.tasks[u].input_gb)
+             for u in uids],
+            self.nodes)
         for u in uids:
-            row = mat.setdefault(u, {})
-            for n in self.nodes:
-                mean, _, hi = out[i]
-                row[n.name] = (float(mean),
-                               float(hi - mean) / max(self.z, 1e-9))
-                i += 1
+            self._dist_rows[u] = mat.row(u)
         return mat
 
-    def _snapshot_bands(self, mat, assignment: Dict[str, str],
+    def _snapshot_bands(self, mat: PredictionMatrix,
+                        assignment: Dict[str, str],
                         uids: Optional[set] = None) -> None:
         for uid, name in assignment.items():
             if uids is not None and uid not in uids:
                 continue
-            self._band[uid] = mat[uid][name]
+            self._band[uid] = mat.on(uid, name)
         self._assignment.update(assignment)
 
     # ---- executor protocol --------------------------------------------------
     def initial_schedule(self) -> Schedule:
         mat = self._prediction_matrix(self.dag.tasks)
-        sched = heft_schedule(self.dag, self.nodes,
-                              lambda u, n: mat[u][n.name][0])
+        sched = heft_schedule_matrix(self.dag, self.nodes, mat,
+                                     quantile=self.quantile)
         self._band.clear()
         self._snapshot_bands(mat, sched.assignment)
         self._since_resched = 10 ** 9
@@ -142,6 +152,19 @@ class OnlineReschedulingPlanner:
         self._since_resched = 0
         self.stats.reschedules += 1
         return self._replan(state, set(frontier))
+
+    # ---- speculation policy -------------------------------------------------
+    def decide_speculation(self, uid: str, node: str, elapsed_s: float,
+                           idle_nodes: List[NodeSpec],
+                           q: float = 0.95) -> SpeculationDecision:
+        """Uncertainty-driven straggler verdict for a running task, read
+        from its last-planned decision-plane row (simulator protocol for
+        `execute_adaptive(speculation=...)`)."""
+        row = self._dist_rows.get(uid)
+        if row is None or node not in row.node_names:
+            return SpeculationDecision(threshold_s=float("inf"),
+                                       speculate=False)
+        return decide_speculation(elapsed_s, row, node, idle_nodes, q=q)
 
     # ---- frontier re-planning -----------------------------------------------
     def _replan(self, state: SimState, frontier: set) -> Schedule:
@@ -187,9 +210,9 @@ class OnlineReschedulingPlanner:
                     self.dag.tasks[d].output_gb, node_by_name[dn_name], node))
             return ready
 
-        new_sched = heft_schedule(sub, self.nodes,
-                                  lambda u, n: mat[u][n.name][0],
-                                  ready_at=ready_at,
-                                  node_available=node_avail)
+        new_sched = heft_schedule_matrix(sub, self.nodes, mat,
+                                         quantile=self.quantile,
+                                         ready_at=ready_at,
+                                         node_available=node_avail)
         self._snapshot_bands(mat, new_sched.assignment, frontier)
         return new_sched

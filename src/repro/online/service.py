@@ -23,7 +23,7 @@ factor(task, bench)` — both LotaruPredictor and OnlinePredictor do.
 """
 from __future__ import annotations
 
-from typing import List, Mapping, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,7 +32,7 @@ from repro.core.traces import PredictionRow
 from repro.online.events import PredictionQuery
 from repro.store import (DEFAULT_TENANT, DEFAULT_WORKFLOW, PosteriorStore,
                          TenantBinding)
-from repro.store.compute import finalize, predict_stacked
+from repro.store.compute import finalize, predict_stacked, scale
 
 
 class PredictionService:
@@ -79,6 +79,30 @@ class PredictionService:
         x = np.asarray([q.input_gb for q in queries])
         mean, std = predict_stacked(x, post, impl=self.impl)
         return finalize(mean, std, self._binding.factors(queries), self.z)
+
+    def predict_matrix(self, tasks: Sequence[Tuple[str, float]],
+                       nodes: Sequence[Optional[str]]
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """(mean, std) (T, N) float64 arrays for every (task, node) pair —
+        the decision plane's one-dispatch-per-planning-round primitive.
+
+        Node never enters the predictive kernel (extrapolation factors are
+        deterministic per-(task, node) rescalings), so the matrix costs a
+        single T-row store gather + ONE batched predictive call + a (T, N)
+        factor scaling — not the T x N rows a flattened predict_batch
+        would gather.  Values are elementwise-identical to predict_batch
+        over the flattened queries (same gathered rows, same finalize
+        arithmetic)."""
+        if not tasks or not nodes:
+            return (np.zeros((len(tasks), len(nodes))),
+                    np.zeros((len(tasks), len(nodes))))
+        self._binding.sync()
+        snap = self.store.snapshot()
+        post = snap.gather([self._binding.key_str(t) for t, _ in tasks])
+        x = np.asarray([gb for _, gb in tasks])
+        mean, std = predict_stacked(x, post, impl=self.impl)
+        f = self._binding.factor_matrix([t for t, _ in tasks], list(nodes))
+        return scale(mean[:, None], std[:, None], f)
 
     def predict_rows(self, dag_tasks, targets: Sequence[MachineBench],
                      workflow: str) -> List[PredictionRow]:

@@ -9,6 +9,13 @@ mean, small swings).  Deterministic per (region, seed).
 A workload of given power profile is shifted to a policy-dependent start
 slot chosen with *predicted* duration; realized emissions use the *actual*
 duration — so prediction error directly costs carbon.
+
+`shift_workload` is a decision-plane consumer: `predicted_h` may be a
+runtime *distribution* (anything with `.quantile(q)`, e.g.
+`sched.plane.RuntimeDist` or a `TaskDistribution.dist(node)` row) instead
+of a bare float — the scheduler then books the q-quantile hours, trading
+a little extra low-carbon reservation against overflow into unplanned
+(arbitrary-carbon) hours when the mean under-predicts.
 """
 from __future__ import annotations
 
@@ -99,15 +106,23 @@ class ShiftOutcome:
                         max(self.emissions_now_g, 1e-9))
 
 
-def shift_workload(region: str, policy: str, predicted_h: float,
+def shift_workload(region: str, policy: str, predicted_h,
                    actual_h: float, power_kw: float,
-                   seed: int = 0) -> ShiftOutcome:
+                   seed: int = 0, q: float = 0.5) -> ShiftOutcome:
     """Let's-Wait-Awhile semantics: the workload moves to the policy's next
     slot and is *interruptible* within the window to the following slot.
     The scheduler books the ceil(predicted) lowest-carbon hours of the
     window; execution consumes booked hours chronologically for the *actual*
     duration — under-prediction overflows into unplanned (arbitrary-carbon)
-    hours right after the window (prediction error costs carbon)."""
+    hours right after the window (prediction error costs carbon).
+
+    `predicted_h` is a float (booked as-is; `q` ignored) or a predictive
+    distribution with `.quantile(q)` (`sched.plane.RuntimeDist`): the
+    booking then covers the q-quantile duration, so an uncertainty-aware
+    planner reserves enough low-carbon capacity to absorb its own
+    prediction error instead of overflowing at the mean."""
+    if hasattr(predicted_h, "quantile"):
+        predicted_h = float(predicted_h.quantile(q))
     series = intensity_series(region, seed)
     start, window = _next_slot_and_window(policy)
     window = min(window, HOURS - start - 48)

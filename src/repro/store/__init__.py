@@ -7,7 +7,8 @@ checkpoint/restore), `frontend` (async batch-window coalescing).
 `repro.online` sits on top of this package, never the other way around.
 """
 from repro.store.compute import predict_stacked                    # noqa: F401
-from repro.store.frontend import AsyncPredictionFrontend           # noqa: F401
+from repro.store.frontend import (AsyncPredictionFrontend,         # noqa: F401
+                                  QueueFullError)
 from repro.store.keys import (DEFAULT_TENANT, DEFAULT_WORKFLOW,    # noqa: F401
                               TaskKey, resolve_bench)
 from repro.store.posterior import (PosteriorStore, StoreSnapshot,  # noqa: F401

@@ -41,13 +41,21 @@ def predict_stacked(x: np.ndarray, post: dict, impl: str = "auto"
     return bayes.predict_blr_np(post, np.asarray(x, np.float64))
 
 
+def scale(mean: np.ndarray, std: np.ndarray, factors: np.ndarray
+          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Extrapolation-factor rescaling (with the mean floor) shared by the
+    flat path (`finalize`) and the decision plane's matrix path — one
+    definition, so the two can never drift apart (broadcasts, so factors
+    may be per-query (Q,) or a (T, N) matrix against (T, 1) predictions)."""
+    f = np.asarray(factors, np.float64)
+    return np.maximum(mean, 1e-3) * f, std * f
+
+
 def finalize(mean: np.ndarray, std: np.ndarray, factors: np.ndarray,
              z: float) -> np.ndarray:
     """Apply extrapolation factors and credible bands -> (Q, 3) array of
     [mean, lower, upper] seconds."""
-    f = np.asarray(factors, np.float64)
-    mean = np.maximum(mean, 1e-3) * f
-    std = std * f
+    mean, std = scale(mean, std, factors)
     lower = np.maximum(mean - z * std, 0.0)
     upper = mean + z * std
     return np.stack([mean, lower, upper], axis=1)

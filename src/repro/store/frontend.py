@@ -42,14 +42,25 @@ def _safe_set(fut: Future, result=None, exc: Optional[BaseException] = None
         fut.set_result(result)
 
 
+class QueueFullError(RuntimeError):
+    """Raised by predict_async when `max_pending_batches` caller batches
+    are already parked: the window is not draining fast enough, and
+    failing fast beats queueing unboundedly (the caller sheds load or
+    retries after a flush)."""
+
+
 class AsyncPredictionFrontend:
     def __init__(self, store: PosteriorStore, z: float = 1.96,
                  impl: str = "auto", window_s: float = 0.002,
-                 auto_flush: bool = True):
+                 auto_flush: bool = True,
+                 max_pending_batches: Optional[int] = None):
+        if max_pending_batches is not None and max_pending_batches < 1:
+            raise ValueError("max_pending_batches must be >= 1")
         self.store = store
         self.z = z
         self.impl = impl
         self.window_s = window_s
+        self.max_pending_batches = max_pending_batches
         self.dispatch_count = 0          # kernel dispatches issued
         self.coalesced: List[int] = []   # callers coalesced per dispatch
                                          # (bounded: recent dispatches only)
@@ -80,6 +91,12 @@ class AsyncPredictionFrontend:
         with self._cv:
             if self._closed:
                 raise RuntimeError("frontend is closed")
+            if (self.max_pending_batches is not None
+                    and len(self._pending) >= self.max_pending_batches):
+                raise QueueFullError(
+                    f"{len(self._pending)} caller batches already queued "
+                    f"(max_pending_batches={self.max_pending_batches}); "
+                    f"retry after the next flush")
             self._pending.append((binding, queries, fut))
             self._cv.notify()
         return fut

@@ -32,6 +32,7 @@ cache.
 """
 from __future__ import annotations
 
+import heapq
 import json
 import os
 import threading
@@ -40,7 +41,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.store.compute import LEAF_SHAPES, LEAVES
-from repro.store.keys import (DEFAULT_TENANT, DEFAULT_WORKFLOW, TaskKey,
+from repro.store.keys import (DEFAULT_TENANT, DEFAULT_WORKFLOW, SEP, TaskKey,
                               namespace_str, resolve_bench)
 
 DEFAULT_BLOCK_SIZE = 512
@@ -65,9 +66,10 @@ class StoreSnapshot:
     """Immutable view of the store at one generation.
 
     Writers replace whole blocks (copy-on-write), so holding references to
-    the block arrays is enough; the live key index is shared and guarded by
-    `n_rows` (keys are append-only — a key assigned after the snapshot maps
-    to a row the snapshot refuses to serve)."""
+    the block arrays is enough; the key index is copied at snapshot time —
+    `evict()` may recycle freed row slots for *new* keys, and a shared
+    live index would silently resolve such a key to the evicted tenant's
+    old row (`n_rows` still guards keys appended past the snapshot)."""
 
     __slots__ = ("_blocks", "_rows", "_n_rows", "_block_size", "generation")
 
@@ -126,7 +128,8 @@ class TenantBinding:
         self.predictor = predictor
         self.benches = dict(benches or {})
         self._detached = False           # set when another predictor takes
-        self._synced_version: Optional[int] = None   # the namespace over
+        self._detach_reason: Optional[str] = None    # the namespace over,
+        self._synced_version: Optional[int] = None   # or on evict()
         self._change_cursor = -1.0       # this binding's position in the
         self._sync_lock = threading.Lock()   # predictor's change feed
         self._keys: Dict[str, TaskKey] = {}       # task -> key (hot-path
@@ -175,14 +178,13 @@ class TenantBinding:
         are picked up."""
         p = self.predictor
         with self._sync_lock:       # serialize concurrent syncs (frontend
-            if self._detached:      # checked under the lock: bind() detaches
-                # under this same lock, so an in-flight sync either lands
-                # its rows BEFORE the displacing full restack or dies here
-                raise RuntimeError(
-                    f"binding for {self.namespace!r} was displaced by a "
-                    f"later bind() of a different predictor; services "
-                    f"holding it must be rebuilt (two live updaters would "
-                    f"silently alternate overwriting the same rows)")
+            if self._detached:      # checked under the lock: bind()/evict()
+                # detach under this same lock, so an in-flight sync either
+                # lands its rows BEFORE the displacing restack/purge or
+                # dies here
+                raise RuntimeError(self._detach_reason or (
+                    f"binding for {self.namespace!r} was detached from "
+                    f"the store; services holding it must be rebuilt"))
             version = getattr(p, "version", 0)   # worker vs predict_batch:
             # a sync in one thread must land its put before another thread
             # concludes the namespace is clean and snapshots stale rows
@@ -240,6 +242,18 @@ class TenantBinding:
         return np.asarray([self.base_factor(q.task, q.node)
                            * corr.get(q.node, 1.0) for q in queries])
 
+    def factor_matrix(self, tasks: Sequence[str],
+                      nodes: Sequence[Optional[str]]) -> np.ndarray:
+        """(T, N) multiplicative factor matrix for the decision plane: the
+        same static x streaming product `factors` computes per query, laid
+        out for a tasks x nodes prediction matrix (None column -> local,
+        factor 1)."""
+        corr_fn = getattr(self.predictor, "node_correction", None)
+        corr = ({n: corr_fn(n) for n in set(nodes)} if corr_fn
+                else {n: 1.0 for n in set(nodes)})
+        return np.asarray([[self.base_factor(t, n) * corr.get(n, 1.0)
+                            for n in nodes] for t in tasks])
+
 
 class PosteriorStore:
     """See module docstring.  Thread-safe for concurrent put/snapshot."""
@@ -250,9 +264,12 @@ class PosteriorStore:
         self.block_size = int(block_size)
         self.generation = 0
         self._lock = threading.RLock()
-        self._rows: Dict[str, int] = {}          # key str -> row (append-only)
+        self._rows: Dict[str, int] = {}          # key str -> row (a live key
+                                                 # never moves; evict() may
+                                                 # recycle freed row slots)
         self._next_row = 0                       # allocation cursor (> any
                                                  # restored row index)
+        self._free_rows: List[int] = []          # heap of evicted row slots
         self._blocks: List[Dict[str, np.ndarray]] = []
         self._bindings: Dict[Tuple[str, str], TenantBinding] = {}
         self._saved_states: Dict[str, dict] = {}  # namespace -> checkpointed
@@ -265,6 +282,12 @@ class PosteriorStore:
     @property
     def num_blocks(self) -> int:
         return len(self._blocks)
+
+    @property
+    def num_free_blocks(self) -> int:
+        """Blocks fully released by evict() (backing arrays dropped)."""
+        with self._lock:
+            return sum(b is None for b in self._blocks)
 
     def task_keys(self) -> List[str]:
         with self._lock:
@@ -305,6 +328,11 @@ class PosteriorStore:
             # later one can write rows again
             with old._sync_lock:
                 old._detached = True
+                old._detach_reason = (
+                    f"binding for {old.namespace!r} was displaced by a "
+                    f"later bind() of a different predictor; services "
+                    f"holding it must be rebuilt (two live updaters would "
+                    f"silently alternate overwriting the same rows)")
             with self._lock:
                 if self._bindings.get((tenant, workflow)) is old:
                     b = TenantBinding(self, tenant, workflow, predictor,
@@ -348,13 +376,19 @@ class PosteriorStore:
             for ks, leaves in staged:
                 row = self._rows.get(ks)
                 if row is None:
-                    row = self._next_row       # never len(_rows): restored
-                    self._next_row += 1        # manifests may have row ids
+                    if self._free_rows:         # recycle evicted slots first
+                        row = heapq.heappop(self._free_rows)
+                    else:
+                        row = self._next_row   # never len(_rows): restored
+                        self._next_row += 1    # manifests may have row ids
                     self._rows[ks] = row       # beyond the key count
                 bid, slot = divmod(row, self.block_size)
                 while bid >= len(self._blocks):
                     self._blocks.append(_new_block(self.block_size))
                     fresh.add(len(self._blocks) - 1)
+                if self._blocks[bid] is None:   # released by evict()
+                    self._blocks[bid] = _new_block(self.block_size)
+                    fresh.add(bid)
                 touched.setdefault(bid, []).append((slot, leaves))
             for bid, writes in touched.items():
                 block = self._blocks[bid]
@@ -371,7 +405,7 @@ class PosteriorStore:
     def snapshot(self) -> StoreSnapshot:
         with self._lock:
             if self._snap is None:
-                self._snap = StoreSnapshot(self._blocks, self._rows,
+                self._snap = StoreSnapshot(self._blocks, dict(self._rows),
                                            self._next_row, self.block_size,
                                            self.generation)
             return self._snap
@@ -397,7 +431,8 @@ class PosteriorStore:
                            # checkpoint new state over a pre-observe row
         with self._lock:
             arrays = {f"b{i}__{leaf}": blk[leaf]
-                      for i, blk in enumerate(self._blocks) for leaf in LEAVES}
+                      for i, blk in enumerate(self._blocks)
+                      for leaf in LEAVES if blk is not None}
             # start from restored-but-not-resumed namespace states so a
             # partial resume + re-save never drops another tenant's
             # checkpointed streaming state; live bindings overwrite theirs
@@ -459,3 +494,49 @@ class PosteriorStore:
         # blocks when the checkpoint was consistent, and self-repairing
         # when it was not — e.g. a manifest written by an external tool)
         return self.bind(tenant, workflow, predictor, benches, sync=False)
+
+    # ---- row eviction -------------------------------------------------------
+    def evict(self, tenant: str, workflow: str) -> int:
+        """Retire a workflow's namespace: drop its binding, checkpointed
+        streaming state, and every `tenant/workflow/*` row.  Freed row
+        slots are recycled by later put_many allocations, and blocks left
+        with no live row release their backing arrays (`num_free_blocks`).
+        Returns the number of rows evicted; raises KeyError when the
+        namespace has neither rows nor a binding.
+
+        Snapshots taken before the evict keep serving the old rows (the
+        key index is replaced, not mutated); afterwards, a service still
+        holding the binding fails loudly on sync, and new snapshots refuse
+        the evicted keys."""
+        ns = namespace_str(tenant, workflow)
+        with self._lock:
+            binding = self._bindings.pop((tenant, workflow), None)
+            self._saved_states.pop(ns, None)
+        if binding is not None:
+            # outside the store lock (an in-flight sync may need put_many):
+            # after this, no later sync can write the purged rows back
+            with binding._sync_lock:
+                binding._detached = True
+                binding._detach_reason = (
+                    f"namespace {ns!r} was evicted from the store; services "
+                    f"holding this binding must be rebuilt")
+        prefix = ns + SEP
+        with self._lock:
+            victims = [k for k in self._rows if k.startswith(prefix)]
+            if not victims and binding is None:
+                raise KeyError(f"namespace {ns!r} has no rows and no "
+                               f"binding; known: {self.namespaces()}")
+            if not victims:
+                return 0
+            for k in victims:
+                heapq.heappush(self._free_rows, self._rows[k])
+            rows = {k: r for k, r in self._rows.items()
+                    if not k.startswith(prefix)}
+            self._rows = rows            # old snapshots keep the old index
+            live_bids = {r // self.block_size for r in rows.values()}
+            for bid in range(len(self._blocks)):
+                if bid not in live_bids:
+                    self._blocks[bid] = None
+            self.generation += 1
+            self._snap = None
+            return len(victims)

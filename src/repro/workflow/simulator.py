@@ -2,16 +2,20 @@
 WorkSim-PredError role, Section 8): schedules are computed from *predicted*
 runtimes, execution advances with *true* runtimes.
 
-The core loop is a heap-ordered completion-event queue — O(T log T + T N)
-instead of the old O(T^2 N) repeated polling — and every completion flows
-through an `on_complete` hook: the attachment point for the online
-prediction service (streaming Bayesian updates) and, via
-`execute_adaptive`, for in-flight HEFT rescheduling of the not-yet-started
-frontier.
+The core loop is a heap-ordered event queue — O(T log T + T N) instead of
+the old O(T^2 N) repeated polling — and every completion flows through an
+`on_complete` hook: the attachment point for the online prediction service
+(streaming Bayesian updates) and, via `execute_adaptive`, for in-flight
+HEFT rescheduling of the not-yet-started frontier.
 
-Also supports node failures (fail-stop with re-execution) and
-uncertainty-driven speculative straggler duplication — the fault-tolerance
-features the resource manager needs at scale.
+Fault tolerance at scale: node failures (fail-stop with re-execution) and
+uncertainty-driven speculative straggler duplication.  The event loop
+supports *backup launches* — a running task is duplicated on an idle node,
+the first finisher wins, the loser is cancelled and its slot freed — and
+`execute_adaptive(speculation=...)` consults the planner's
+`decide_speculation` (posterior-quantile thresholds from the decision
+plane, `sched.straggler`) on periodic progress-check events, so stragglers
+are actually duplicated rather than just re-planned around.
 """
 from __future__ import annotations
 
@@ -24,6 +28,8 @@ import numpy as np
 from repro.core.microbench import NodeSpec
 from repro.sched.heft import Schedule, comm_seconds
 from repro.workflow.dag import WorkflowDAG
+
+_FINISH, _CHECK = 0, 1     # heap event kinds ((time, seq) keeps order total)
 
 
 @dataclass
@@ -41,9 +47,22 @@ class SimResult:
     records: List[ExecRecord]
     node_busy: Dict[str, List[Tuple[float, float]]]
     n_reschedules: int = 0
+    n_backups: int = 0            # speculative copies launched
+    backup_waste_s: float = 0.0   # seconds burned on cancelled losers
 
     def busy_seconds(self) -> Dict[str, float]:
         return {n: sum(b - a for a, b in iv) for n, iv in self.node_busy.items()}
+
+
+@dataclass
+class SpeculationPolicy:
+    """Knobs for uncertainty-driven speculative re-execution in
+    `execute_adaptive`: declare a running task a straggler once its elapsed
+    time exceeds the posterior q-quantile on its node, and duplicate it on
+    the best idle node (one backup per task; a speculation budget cap and
+    multi-backup policies are ROADMAP follow-ups)."""
+    q: float = 0.95
+    check_interval_s: float = 30.0
 
 
 @dataclass
@@ -65,7 +84,10 @@ class SimState:
 class _EventLoop:
     """Shared heap-ordered execution core for the static and adaptive
     executors.  A task is *booked* (started) the moment its node commits to
-    it; booking pushes its completion event."""
+    it; booking pushes its completion event.  A booked task may gain ONE
+    speculative backup launch: whichever copy finishes first produces the
+    task's single ExecRecord, the other copy's event is cancelled and its
+    node freed at the winner's finish time."""
 
     def __init__(self, dag: WorkflowDAG, nodes: List[NodeSpec],
                  true_runtime: Callable[[str, NodeSpec], float],
@@ -87,12 +109,31 @@ class _EventLoop:
         self.started: Set[str] = set()
         self.running: Dict[str, Tuple[str, float]] = {}   # uid -> (node, start)
         self.now = 0.0
-        self._heap: List[Tuple[float, int, str, str, float, int]] = []
+        self.n_backups = 0
+        self.backup_waste_s = 0.0
+        # uid -> [(seq, node, start, end), ...] live launches (primary +
+        # backup); end is the booked finish, needed to free slots safely
+        self._launches: Dict[str, List[Tuple[int, str, float, float]]] = {}
+        self._cancelled: Set[int] = set()
+        self._heap: List[Tuple[float, int, int, str, str, float, int]] = []
         self._seq = 0
 
     def set_queues(self, order: Dict[str, List[str]]):
         for name in self.queues:
             self.queues[name] = list(order.get(name, []))
+
+    def _push_finish(self, uid: str, name: str, start: float, end: float,
+                     failed: bool):
+        self._seq += 1
+        self._launches.setdefault(uid, []).append((self._seq, name, start,
+                                                   end))
+        heapq.heappush(self._heap, (end, self._seq, _FINISH, uid, name,
+                                    start, int(failed)))
+
+    def push_check(self, t: float):
+        """Schedule a progress-check event (speculation heartbeat)."""
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, _CHECK, "", "", 0.0, 0))
 
     def try_start(self, name: str):
         q = self.queues[name]
@@ -123,29 +164,97 @@ class _EventLoop:
         self.node_free[name] = end
         self.started.add(u)
         self.running[u] = (name, start)
-        self._seq += 1
-        heapq.heappush(self._heap,
-                       (end, self._seq, u, name, start, int(failed)))
+        self._push_finish(u, name, start, end, failed)
+
+    def launch_backup(self, uid: str, name: str) -> bool:
+        """Duplicate a running task on an idle node (first-finisher-wins).
+        The backup runs the task's base true runtime — the injected
+        straggler inflation models an incident local to the original
+        placement (I/O contention, a sick disk), which is exactly what
+        speculation exists to escape.  Returns False when the node is not
+        actually idle or the task already has a backup."""
+        if (uid not in self.running or uid in self.done
+                or len(self._launches.get(uid, ())) > 1
+                or self.node_free[name] > self.now
+                or self._head_runnable(name)):
+            return False
+        node = self.node_by_name[name]
+        start = self.now
+        dur = self.true_runtime(uid, node)
+        end = start + dur
+        failed = name in self.failures and start < self.failures[name] <= end
+        if failed:
+            end = self.failures[name] + 60.0 + dur
+        self.node_free[name] = end
+        self._push_finish(uid, name, start, end, failed)
+        self.n_backups += 1
+        return True
 
     def start_all_runnable(self):
         for name in self.queues:
             self.try_start(name)
 
+    def pop_event(self) -> Optional[Tuple[str, object]]:
+        """Next live event: ("finish", ExecRecord) or ("check", time)."""
+        while self._heap:
+            end, seq, kind, u, name, start, failed = heapq.heappop(self._heap)
+            if seq in self._cancelled:
+                self._cancelled.discard(seq)
+                continue
+            self.now = end
+            if kind == _CHECK:
+                return ("check", end)
+            # first finisher wins: cancel every other live launch of u and
+            # free its slot from the moment the winner finished — but only
+            # rewind node_free when the loser was the node's LAST booking
+            # (try_start stacks future bookings behind running tasks;
+            # rewinding past one would double-book the slot)
+            for lseq, lname, lstart, lend in self._launches.pop(u, ()):
+                if lseq == seq:
+                    continue
+                self._cancelled.add(lseq)
+                if self.node_free[lname] == lend:
+                    self.node_free[lname] = end
+                if lstart < end:
+                    self.busy[lname].append((lstart, end))
+                    self.backup_waste_s += end - lstart
+            self.done.add(u)
+            self.finish[u] = end
+            self.assigned_node[u] = name
+            self.running.pop(u, None)
+            self.busy[name].append((start, end))
+            # attempt > 0 marks a failure re-run: finish - start includes
+            # recovery downtime, NOT the task's runtime — observers must
+            # filter
+            rec = ExecRecord(u, name, start, end, attempt=failed)
+            self.records.append(rec)
+            return ("finish", rec)
+        return None
+
     def pop(self) -> Optional[ExecRecord]:
-        if not self._heap:
-            return None
-        end, _, u, name, start, failed = heapq.heappop(self._heap)
-        self.now = end
-        self.done.add(u)
-        self.finish[u] = end
-        self.assigned_node[u] = name
-        self.running.pop(u, None)
-        self.busy[name].append((start, end))
-        # attempt > 0 marks a failure re-run: finish - start includes
-        # recovery downtime, NOT the task's runtime — observers must filter
-        rec = ExecRecord(u, name, start, end, attempt=failed)
-        self.records.append(rec)
-        return rec
+        """Next completion (skipping check events)."""
+        while True:
+            ev = self.pop_event()
+            if ev is None:
+                return None
+            if ev[0] == "finish":
+                return ev[1]
+
+    def _head_runnable(self, name: str) -> bool:
+        q = self.queues[name]
+        return bool(q) and all(d in self.done
+                               for d in self.dag.tasks[q[0]].deps)
+
+    def idle_nodes(self) -> List[NodeSpec]:
+        """Backup candidates: nodes free right now whose queue is empty or
+        dependency-stalled.  A free node with a *runnable* head cannot
+        occur between events (try_start would have booked it), so this is
+        every node currently wasting a slot — exactly the slack
+        speculation exists to use (a backup may delay the stalled queue,
+        but first-finisher-wins frees the slot at the winner's finish)."""
+        return [self.node_by_name[name] for name, free in
+                self.node_free.items()
+                if free <= self.now and not self._head_runnable(name)]
 
     def state(self, now: float) -> SimState:
         return SimState(
@@ -160,7 +269,9 @@ class _EventLoop:
         assert not pending, f"deadlock: {sorted(pending)[:5]}"
         return SimResult(makespan=max(self.finish.values(), default=0.0),
                          records=self.records, node_busy=self.busy,
-                         n_reschedules=n_reschedules)
+                         n_reschedules=n_reschedules,
+                         n_backups=self.n_backups,
+                         backup_waste_s=self.backup_waste_s)
 
 
 def execute_schedule(dag: WorkflowDAG, sched: Schedule,
@@ -196,11 +307,31 @@ def execute_schedule(dag: WorkflowDAG, sched: Schedule,
     return loop.result()
 
 
+def _progress_check(loop: _EventLoop, planner,
+                    spec: SpeculationPolicy) -> None:
+    """Consult the planner's speculation policy for every running primary
+    without a backup; launch backups on idle nodes (greedily, fastest
+    predicted idle node per straggler)."""
+    idle = loop.idle_nodes()
+    for uid, (name, start) in sorted(loop.running.items(),
+                                     key=lambda kv: kv[1][1]):
+        if not idle:
+            return
+        if len(loop._launches.get(uid, ())) > 1:
+            continue                         # already speculated
+        dec = planner.decide_speculation(uid, name, loop.now - start, idle,
+                                         q=spec.q)
+        if dec.speculate and dec.backup_node:
+            if loop.launch_backup(uid, dec.backup_node):
+                idle = [n for n in idle if n.name != dec.backup_node]
+
+
 def execute_adaptive(dag: WorkflowDAG, nodes: List[NodeSpec],
                      planner,
                      true_runtime: Callable[[str, NodeSpec], float],
                      failures: Optional[Dict[str, float]] = None,
-                     straggler_factor: Optional[Callable[[str], float]] = None
+                     straggler_factor: Optional[Callable[[str], float]] = None,
+                     speculation: Optional[SpeculationPolicy] = None
                      ) -> SimResult:
     """Event-driven execution with in-flight rescheduling.
 
@@ -210,17 +341,38 @@ def execute_adaptive(dag: WorkflowDAG, nodes: List[NodeSpec],
     The planner observes every completion (feeding its online predictor);
     when it returns a new Schedule, the not-yet-started frontier is
     re-queued accordingly (booked/running tasks are never recalled).
+
+    With a `SpeculationPolicy`, the loop fires a progress-check event every
+    `check_interval_s`; the planner must additionally provide
+      decide_speculation(uid, node, elapsed_s, idle_nodes, q)
+        -> sched.straggler.SpeculationDecision
+    and flagged stragglers are duplicated on idle nodes via backup
+    launches (first finisher wins; the loser is cancelled, never recorded).
     """
     loop = _EventLoop(dag, nodes, true_runtime, failures, straggler_factor)
+    if speculation is not None and \
+            getattr(planner, "decide_speculation", None) is None:
+        raise TypeError("speculation needs a planner with "
+                        "decide_speculation(uid, node, elapsed_s, "
+                        "idle_nodes, q)")
     sched = planner.initial_schedule()
     loop.assigned_node.update(sched.assignment)
     loop.set_queues(sched.order)
     loop.start_all_runnable()
+    if speculation is not None:
+        loop.push_check(speculation.check_interval_s)
     n_resched = 0
     while True:
-        rec = loop.pop()
-        if rec is None:
+        ev = loop.pop_event()
+        if ev is None:
             break
+        if ev[0] == "check":
+            if loop._launches:       # tasks in flight -> keep the heartbeat
+                _progress_check(loop, planner, speculation)
+                loop.push_check(loop.now + speculation.check_interval_s)
+                loop.start_all_runnable()
+            continue
+        rec = ev[1]
         new_sched = planner.on_completion(rec, loop.state(rec.finish))
         if new_sched is not None:
             n_resched += 1

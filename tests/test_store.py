@@ -512,3 +512,92 @@ def test_factor_cache_scoped_to_fit_version():
     m2, lo2, hi2 = lot.predict("bwa", 2.0, benches["C2"])
     assert m == pytest.approx(m2, rel=1e-6)
     assert hi == pytest.approx(hi2, rel=1e-6)
+
+
+# --- eviction + backpressure (decision-plane PR) --------------------------------
+def test_evict_frees_blocks_and_recycles_rows():
+    """retiring a workflow's namespace releases whole blocks, later writes
+    recycle the freed row slots, and everything else keeps serving."""
+    lot_a = _fit(("t0", "t1", "t2", "t3"))
+    lot_b = _fit(("bwa", "idx"))
+    store = PosteriorStore(block_size=2)
+    svc_a = PredictionService(lot_a, store=store, tenant="a", workflow="w1")
+    svc_b = PredictionService(lot_b, store=store, tenant="b", workflow="w2")
+    assert len(store) == 6 and store.num_blocks == 3
+    pre_evict = store.snapshot()
+
+    assert store.evict("a", "w1") == 4
+    assert len(store) == 2
+    # rows 0-3 lived in blocks 0-1; with no live row left those blocks drop
+    # their backing arrays
+    assert store.num_free_blocks == 2
+    # snapshots taken before the evict keep serving the old rows ...
+    assert TaskKey("a", "w1", "t0") in pre_evict
+    # ... new ones refuse them, and the other namespace is untouched
+    with pytest.raises(KeyError):
+        store.snapshot().row_of(TaskKey("a", "w1", "t0"))
+    assert svc_b.predict_batch([PredictionQuery("bwa", None, 1.0)]).shape \
+        == (1, 3)
+
+    # the evicted namespace's service fails loudly, not with stale data
+    with pytest.raises(RuntimeError, match="evicted"):
+        svc_a.predict_batch([PredictionQuery("t0", None, 1.0)])
+
+    # a new workflow recycles the freed row slots instead of growing
+    lot_c = _fit(("x0", "x1", "x2"))
+    PredictionService(lot_c, store=store, tenant="c", workflow="w3")
+    assert len(store) == 5
+    assert store.num_blocks == 3          # no new blocks allocated
+    assert store.num_free_blocks == 0     # recycled slots rematerialized them
+    evicted_rows = {0, 1, 2, 3}
+    reused = {store.snapshot().row_of(TaskKey("c", "w3", t))
+              for t in ("x0", "x1", "x2")}
+    assert reused < evicted_rows
+
+
+def test_evict_unknown_namespace_raises():
+    store = PosteriorStore()
+    store.bind("a", "w", _fit(("bwa",)))
+    with pytest.raises(KeyError, match="no rows"):
+        store.evict("a", "nope")
+
+
+def test_frontend_backpressure_cap():
+    """predict_async fails fast with QueueFullError once
+    max_pending_batches caller batches are parked; a flush drains the
+    window and the front-end accepts again."""
+    from repro.store import QueueFullError
+    store = PosteriorStore()
+    store.bind("a", "w", _fit(("bwa", "idx")))
+    fe = AsyncPredictionFrontend(store, auto_flush=False,
+                                 max_pending_batches=2)
+    qs = _queries(("bwa",), (None,))
+    futs = [fe.predict_async(qs, "a", "w") for _ in range(2)]
+    with pytest.raises(QueueFullError, match="max_pending_batches=2"):
+        fe.predict_async(qs, "a", "w")
+    assert fe.flush() == 2
+    for f in futs:
+        assert f.result(timeout=5).shape == (len(qs), 3)
+    # drained -> accepting again
+    f3 = fe.predict_async(qs, "a", "w")
+    fe.flush()
+    assert f3.result(timeout=5).shape == (len(qs), 3)
+    with pytest.raises(ValueError):
+        AsyncPredictionFrontend(store, auto_flush=False,
+                                max_pending_batches=0)
+
+
+def test_snapshot_between_evict_and_recycle_refuses_new_keys():
+    """a snapshot taken after evict() but before a recycling put_many must
+    refuse the recycled keys (KeyError) — never silently serve the evicted
+    tenant's old rows for them."""
+    lot_a = _fit(("t0", "t1"))
+    store = PosteriorStore(block_size=2)
+    store.bind("a", "w1", lot_a)
+    store.evict("a", "w1")
+    stale = store.snapshot()              # index copied at this point
+    store.bind("c", "w3", _fit(("x0",)))  # recycles freed row 0
+    fresh = store.snapshot()
+    assert fresh.row_of(TaskKey("c", "w3", "x0")) == 0
+    with pytest.raises(KeyError):
+        stale.row_of(TaskKey("c", "w3", "x0"))

@@ -9,6 +9,7 @@ from repro.sched.cost import _billed_hours, cost_deviation_pct
 from repro.sched.elastic import (checkpoint_every_n_steps, choose_workers,
                                  expected_waste_fraction, young_daly_interval_s)
 from repro.sched.heft import comm_seconds, heft_schedule
+from repro.sched.plane import RuntimeDist, TaskDistribution
 from repro.sched.straggler import (decide_speculation, normal_quantile,
                                    straggler_threshold)
 from repro.workflow.dag import TaskInstance, WorkflowDAG
@@ -135,6 +136,24 @@ def test_shift_saves_vs_now_with_accurate_duration():
     assert o.emissions_shifted_g <= o.emissions_now_g + 1e-6
 
 
+def test_shift_workload_accepts_distribution():
+    """decision-plane consumer: predicted_h may be a RuntimeDist booked at
+    quantile q — q=0.5 reproduces the float-mean path exactly, a higher q
+    books strictly more (never fewer) low-carbon hours."""
+    base = shift_workload("germany", "next_monday", predicted_h=5.0,
+                          actual_h=5.0, power_kw=2.0)
+    dist = RuntimeDist(mean=5.0, std=1.0)
+    at_mean = shift_workload("germany", "next_monday", dist,
+                             actual_h=5.0, power_kw=2.0, q=0.5)
+    assert at_mean.emissions_shifted_g == pytest.approx(
+        base.emissions_shifted_g, rel=1e-12)
+    q95 = shift_workload("germany", "next_monday", dist,
+                         actual_h=5.0, power_kw=2.0, q=0.95)
+    # booking covers the 95%-quantile duration: a superset of the cheapest
+    # hours, so reserved emissions can only grow
+    assert q95.emissions_shifted_g >= at_mean.emissions_shifted_g
+
+
 # --- cost ----------------------------------------------------------------------
 def test_billing_math():
     assert _billed_hours(3600, "hourly") == 1
@@ -156,11 +175,18 @@ def test_normal_quantile_sanity():
 
 def test_speculation_decision():
     nodes = list(TARGET_MACHINES)
-    d = decide_speculation(elapsed_s=50, pred_mean=30, pred_std=5,
-                           idle_nodes=nodes, predict_on=lambda n: 100.0 / n.cpu)
+    # running on A1 with predictive N(30, 5); elsewhere the predicted mean
+    # follows cpu speed, so the backup should land on C2 (fastest)
+    dist = TaskDistribution(
+        "u", tuple(n.name for n in nodes),
+        np.asarray([30.0 if n.name == "A1" else 100.0 / n.cpu
+                    for n in nodes]),
+        np.full(len(nodes), 5.0))
+    d = decide_speculation(elapsed_s=50, dist=dist, node="A1",
+                           idle_nodes=[n for n in nodes if n.name != "A1"])
     assert d.speculate and d.backup_node == "C2"
-    d2 = decide_speculation(elapsed_s=31, pred_mean=30, pred_std=5,
-                            idle_nodes=nodes, predict_on=lambda n: 1.0)
+    d2 = decide_speculation(elapsed_s=31, dist=dist, node="A1",
+                            idle_nodes=nodes)
     assert not d2.speculate
 
 
