@@ -22,9 +22,9 @@ def main(argv=None):
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (carbon, cost, online_adaptation, prediction_error,
-                            profiling_time, replan_latency, roofline_report,
-                            scheduling_makespan, service_throughput,
-                            straggler_mitigation)
+                            profiling_time, refresh_overhead, replan_latency,
+                            roofline_report, scheduling_makespan,
+                            service_throughput, straggler_mitigation)
     jobs = {
         "prediction_error": lambda: prediction_error.run(),
         "profiling_time": lambda: profiling_time.run(),
@@ -36,6 +36,7 @@ def main(argv=None):
         "service_throughput": lambda: service_throughput.run(),
         "straggler_mitigation": lambda: straggler_mitigation.run(),
         "replan_latency": lambda: replan_latency.run(),
+        "refresh_overhead": lambda: refresh_overhead.run(),
         "roofline": lambda: roofline_report.run(),
     }
     full_only = {"straggler_mitigation"}

@@ -164,7 +164,11 @@ def nig_from_blr(post: dict) -> dict:
             "a": a, "b": a / beta,
             "x_mu": float(post["x_mu"]), "x_sd": float(post["x_sd"]),
             "y_mu": float(post["y_mu"]), "y_sd": float(post["y_sd"]),
-            "n0": float(post["n"]), "n_obs": 0.0}
+            "n0": float(post["n"]), "n_obs": 0.0,
+            # noise level the evidence fixed point chose at lift time; the
+            # maintenance plane's drift trigger compares the streaming
+            # estimate b/a against it (see online.maintenance.RefreshPolicy)
+            "s2_lift": 1.0 / beta}
 
 
 def nig_update(nig: dict, x_new: float, y_new: float) -> dict:
@@ -214,6 +218,28 @@ def nig_refit(nig0: dict, x: np.ndarray, y: np.ndarray) -> dict:
                a=nig0["a"] + 0.5 * len(xs), b=max(b_n, 1e-12),
                n_obs=nig0["n_obs"] + float(len(xs)))
     return out
+
+
+def refresh_fit(fit_x, fit_y, buf_x, buf_y) -> dict:
+    """Periodic evidence refresh (the maintenance plane's scalar oracle):
+    re-run the MacKay fixed point over the fit-time profiling points plus
+    every streamed observation retained in the buffer, in one fit.
+
+    Streaming NIG updates are exact *given* the hyperparameters frozen at
+    lift time — after hundreds of completions the (alpha, beta) evidence
+    lift and the standardization no longer reflect the data.  This refit
+    re-chooses both from everything observed.  Either side may be empty
+    (a promoted median-fallback task has no fit-time regression data: its
+    streamed-only observations are preserved and refit on their own), but
+    not both.  Returns a predict_blr/nig_from_blr-compatible posterior."""
+    x = np.concatenate([np.asarray(fit_x, np.float64).ravel(),
+                        np.asarray(buf_x, np.float64).ravel()])
+    y = np.concatenate([np.asarray(fit_y, np.float64).ravel(),
+                        np.asarray(buf_y, np.float64).ravel()])
+    if x.size == 0:
+        raise ValueError("refresh_fit needs at least one observation")
+    return {k: np.asarray(v) for k, v in
+            fit_blr(x.astype(np.float32), y.astype(np.float32)).items()}
 
 
 def nig_to_blr(nig: dict) -> dict:

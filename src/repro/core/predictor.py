@@ -37,6 +37,12 @@ class TaskRuntimeModel:
     median_s: float
     spread_s: float                # robust std for the median fallback
     cpu_fraction: float
+    # raw fit-time observations (3-10 local profiling points): the posterior
+    # alone cannot be re-fit, so the maintenance plane's periodic evidence
+    # refresh needs these to re-run the MacKay fixed point over fit-time
+    # plus streamed data (see online.maintenance)
+    fit_x: Optional[np.ndarray] = None
+    fit_y: Optional[np.ndarray] = None
 
     def predict_local(self, input_gb: float) -> Tuple[float, float]:
         if self.correlated and self.posterior is not None:
@@ -88,6 +94,8 @@ class LotaruPredictor:
                 spread_s=float(1.4826 * np.median(np.abs(y - np.median(y)))
                                + 1e-6),
                 cpu_fraction=float(np.mean([r_.cpu_fraction for r_ in rows])),
+                fit_x=np.asarray(x, np.float64),
+                fit_y=np.asarray(y, np.float64),
             )
         return self
 

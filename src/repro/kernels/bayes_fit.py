@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 N_ITERS = 30
@@ -118,6 +119,56 @@ def bayes_fit(x: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray, *,
             "alpha": hyp[:, 0], "beta_prec": hyp[:, 1],
             "x_mu": stat[:, 0], "x_sd": stat[:, 1],
             "y_mu": stat[:, 2], "y_sd": stat[:, 3], "n": stat[:, 4]}
+
+
+def pad_ragged(xs, ys, min_cols: int = 2, col_bucket: int = 64):
+    """Variable-length per-task observation buffers -> fixed-shape
+    (T, N) float32 (x, y, mask) arrays for one batched fit dispatch.
+
+    The maintenance plane gathers the streamed buffers of every due task
+    across every tenant; their lengths are ragged (each task has seen a
+    different number of completions).  Rows are right-padded to the longest
+    buffer with mask=0 — the fit kernel's masked reductions make padded
+    columns exact no-ops, so a (3-point, 200-point) pair costs one tile.
+
+    N is rounded up to a `col_bucket` multiple: successive refresh passes
+    see steadily-growing buffers, and without shape bucketing every pass
+    would re-jit the batched fit for a new N (the same trick as the
+    predict path's _PREDICT_TILE)."""
+    t = len(xs)
+    n = max(min_cols, max((len(v) for v in xs), default=min_cols))
+    if col_bucket > 1:
+        n = -(-n // col_bucket) * col_bucket
+    x = np.zeros((t, n), np.float32)
+    y = np.zeros((t, n), np.float32)
+    m = np.zeros((t, n), np.float32)
+    for i, (xi, yi) in enumerate(zip(xs, ys)):
+        k = len(xi)
+        if k != len(yi):
+            raise ValueError(f"row {i}: len(x)={k} != len(y)={len(yi)}")
+        x[i, :k] = np.asarray(xi, np.float32)
+        y[i, :k] = np.asarray(yi, np.float32)
+        m[i, :k] = 1.0
+    return x, y, m
+
+
+def bayes_fit_ragged(x: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray, *,
+                     block_tasks: int = DEFAULT_BLOCK_TASKS,
+                     interpret: bool = False) -> dict:
+    """`bayes_fit` for any task count: rows already carry per-row masks
+    (pad_ragged); the task dimension is padded to a grid-block multiple
+    with fully-masked rows so a fleet refresh of, say, 130 due tasks still
+    costs ONE pallas_call, then the padding rows are sliced off."""
+    t = x.shape[0]
+    bt = min(block_tasks, t)
+    tp = -(-t // bt) * bt
+    if tp != t:
+        pad = ((0, tp - t), (0, 0))
+        x = jnp.pad(x, pad)
+        y = jnp.pad(y, pad)
+        mask = jnp.pad(mask, pad)
+    post = bayes_fit(x, y, mask, block_tasks=bt, interpret=interpret)
+    return {k: v[:t] for k, v in post.items()}
 
 
 # ---------------------------------------------------------------------------

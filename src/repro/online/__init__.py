@@ -5,11 +5,14 @@ Layering: `events` is leaf-level (shared vocabulary), `predictor` wraps a
 fitted LotaruPredictor with exact conjugate updates, `service` is a
 (tenant, workflow) view over the shared `repro.store.PosteriorStore`
 (stacked rows, copy-on-write snapshots, checkpointing) dispatching the
-fused posterior-predictive kernel, `rescheduler` drives
-`workflow.simulator.execute_adaptive`.  Multi-tenant coalescing lives in
-`repro.store.frontend.AsyncPredictionFrontend`.
+fused posterior-predictive kernel, `maintenance` is the posterior
+maintenance plane (fleet-wide periodic evidence refresh in one batched fit
+dispatch), `rescheduler` drives `workflow.simulator.execute_adaptive`.
+Multi-tenant coalescing lives in `repro.store.frontend`.
 """
 from repro.online.events import TaskCompletion, PredictionQuery  # noqa: F401
 from repro.online.predictor import OnlinePredictor               # noqa: F401
 from repro.online.service import PredictionService               # noqa: F401
+from repro.online.maintenance import (FleetRefresher,            # noqa: F401
+                                      RefreshPolicy, RefreshReport)
 from repro.online.rescheduler import OnlineReschedulingPlanner   # noqa: F401

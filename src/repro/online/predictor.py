@@ -23,8 +23,10 @@ emerges once real input sizes spread out.
 from __future__ import annotations
 
 import math
+import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -90,13 +92,21 @@ class _NodeStats:
                              FACTOR_CLIP))
 
 
+def _ring() -> Deque[float]:
+    return deque(maxlen=MAX_BUFFER)
+
+
 @dataclass
 class _TaskState:
     nig: Optional[dict]                     # streaming posterior (correlated)
     median_s: float
     spread_s: float
-    xs: List[float] = field(default_factory=list)   # local-equivalent obs
-    ys: List[float] = field(default_factory=list)
+    xs: Deque[float] = field(default_factory=_ring)   # local-equivalent obs
+    ys: Deque[float] = field(default_factory=_ring)   # (ring: newest 256)
+    fit_xs: List[float] = field(default_factory=list)   # fit-time profiling
+    fit_ys: List[float] = field(default_factory=list)   # points (refresh)
+    since_refresh: int = 0    # posterior-moving completions since the last
+                              # evidence refresh (RefreshPolicy.every_n)
 
 
 class OnlinePredictor:
@@ -115,13 +125,25 @@ class OnlinePredictor:
         for task, m in base.models.items():
             nig = bayes.nig_from_blr(m.posterior) if (
                 m.correlated and m.posterior is not None) else None
-            self.tasks[task] = _TaskState(nig=nig, median_s=m.median_s,
-                                          spread_s=m.spread_s)
+            st = _TaskState(nig=nig, median_s=m.median_s,
+                            spread_s=m.spread_s)
+            if nig is not None and getattr(m, "fit_x", None) is not None:
+                # fit-time points feed periodic evidence refreshes; a
+                # median-fallback task keeps none (its downsampled profile
+                # points are exactly what a later promotion must NOT trust)
+                st.fit_xs = [float(v) for v in m.fit_x]
+                st.fit_ys = [float(v) for v in m.fit_y]
+            self.tasks[task] = st
         # non-destructive change feed: per-task last-change sequence numbers
         # (store bindings each diff against their own cursor, so ONE
         # predictor can feed any number of bindings/stores)
         self._change_seq = 1
         self._task_changes: Dict[str, int] = {t: 1 for t in self.tasks}
+        # serializes state mutation (observe / apply_refresh / load_state)
+        # against the maintenance plane's snapshot-fit-apply cycle; the
+        # seq guard in apply_refresh is only airtight if the check and the
+        # swap cannot interleave with a concurrent observe()
+        self._state_lock = threading.Lock()
 
     # ---- prediction ---------------------------------------------------------
     @property
@@ -194,6 +216,10 @@ class OnlinePredictor:
 
     def observe(self, comp: TaskCompletion) -> None:
         """Fold one completed task into the posteriors (exact updates)."""
+        with self._state_lock:
+            self._observe(comp)
+
+    def _observe(self, comp: TaskCompletion) -> None:
         if comp.task not in self.tasks:
             return
         st = self.tasks[comp.task]
@@ -235,6 +261,7 @@ class OnlinePredictor:
                 return               # no dirty row, no store COW write
             st.nig = bayes.nig_update(st.nig, comp.input_gb, comp.runtime_s)
             self._buffer(st, comp.input_gb, comp.runtime_s)
+            st.since_refresh += 1
         else:
             if is_remote and (stats is None or stats.n < NODE_MATURE_N):
                 self.version += 1
@@ -248,9 +275,12 @@ class OnlinePredictor:
 
     @staticmethod
     def _buffer(st: _TaskState, x: float, y: float) -> None:
-        if len(st.xs) < MAX_BUFFER:
-            st.xs.append(float(x))
-            st.ys.append(float(y))
+        # ring (deque maxlen): keep the NEWEST window.  The buffer feeds
+        # median updates, promotion checks, and periodic evidence
+        # refreshes — all of which should weight recent production-scale
+        # behaviour, not whichever observations happened to arrive first
+        st.xs.append(float(x))
+        st.ys.append(float(y))
 
     def _update_median(self, st: _TaskState) -> None:
         if st.ys:
@@ -275,21 +305,92 @@ class OnlinePredictor:
             return
         r = float(np.corrcoef(x, y)[0, 1])
         if abs(r) >= self.threshold:
-            post = {k: np.asarray(v) for k, v in bayes.fit_blr(
-                x.astype(np.float32), y.astype(np.float32)).items()}
-            st.nig = bayes.nig_from_blr(post)
+            st.nig = bayes.nig_from_blr(bayes.refresh_fit([], [], x, y))
+            st.since_refresh = 0       # the promotion fit IS a fresh fit
 
     def prediction_std(self, task: str, input_gb: float) -> float:
         """local predictive std (the uncertainty band rescheduling uses)."""
         _, std = bayes.predict_blr_np(self.export_posterior(task), input_gb)
         return float(std)
 
+    # ---- periodic evidence refresh (online.maintenance protocol) ------------
+    def refresh_due(self, policy) -> List[str]:
+        """Tasks whose streaming posterior is due for an evidence refresh
+        under `policy` (online.maintenance.RefreshPolicy): enough
+        completions since the last refresh, or the streaming noise estimate
+        b/a drifted beyond `drift_ratio` x the lift-time level.  Only
+        regression tasks with at least one streamed observation qualify —
+        median-fallback states re-estimate on every completion already."""
+        due = []
+        for task, st in self.tasks.items():
+            if st.nig is None or st.nig["n_obs"] <= 0:
+                continue
+            if len(st.fit_xs) + len(st.xs) < policy.min_points:
+                continue
+            if st.since_refresh >= policy.every_n:
+                due.append(task)
+                continue
+            if policy.drift_ratio is not None and st.since_refresh > 0:
+                s2_lift = float(st.nig.get("s2_lift", 0.0))
+                if s2_lift > 0.0:
+                    ratio = (st.nig["b"] / st.nig["a"]) / s2_lift
+                    if not (1.0 / policy.drift_ratio < ratio
+                            < policy.drift_ratio):
+                        due.append(task)
+        return due
+
+    def refresh_snapshot(self, tasks) -> Dict[str, Tuple[int, np.ndarray,
+                                                         np.ndarray]]:
+        """-> task -> (change seq, x, y): the full evidence for a refresh
+        fit — fit-time profiling points plus the streamed ring buffer
+        (streamed-only observations are preserved, never discarded).  The
+        change seq lets `apply_refresh` reject a fit that raced with a
+        concurrent observe() instead of silently clobbering it."""
+        out = {}
+        with self._state_lock:
+            for t in tasks:
+                st = self.tasks[t]
+                out[t] = (self._task_changes.get(t, 0),
+                          np.asarray(st.fit_xs + list(st.xs), np.float64),
+                          np.asarray(st.fit_ys + list(st.ys), np.float64))
+        return out
+
+    def change_seq(self, task: str) -> int:
+        """Current change-feed sequence of one task — the maintenance
+        plane captures it at publish time so a binding cursor is only
+        advanced past rows nothing has touched since."""
+        return self._task_changes.get(task, 0)
+
+    def apply_refresh(self, task: str, post: Mapping, seq=None) -> bool:
+        """Moment-match a refreshed BLR posterior (the batched evidence
+        fixed point over this task's refresh_snapshot data) back into the
+        streaming NIG state.  Returns False — leaving the task due — when
+        `seq` shows an observation landed after the snapshot was taken
+        (checked and swapped under the state lock, so the verdict cannot
+        race a concurrent observe)."""
+        with self._state_lock:
+            st = self.tasks[task]
+            if seq is not None and self._task_changes.get(task) != seq:
+                return False
+            st.nig = bayes.nig_from_blr(post)
+            st.since_refresh = 0
+            self._mark_changed(task)
+            self.version += 1
+            return True
+
     # ---- checkpoint (PosteriorStore save/resume) ----------------------------
     def export_state(self) -> dict:
         """JSON-serializable streaming state: NIG posteriors, median/MAD
         states with their observation buffers, per-node correction logs.
         Pure-python floats/lists only — json float repr round-trips float64
-        exactly, so save -> load_state is bit-identical."""
+        exactly, so save -> load_state is bit-identical.  Taken under the
+        state lock: a checkpoint racing a concurrent observe/apply_refresh
+        must capture a consistent instant, never a torn one (e.g. a
+        nig_update without its matching buffer append)."""
+        with self._state_lock:
+            return self._export_state()
+
+    def _export_state(self) -> dict:
         def _leaf(v):
             return v.tolist() if isinstance(v, np.ndarray) else float(v)
         tasks = {}
@@ -300,7 +401,10 @@ class OnlinePredictor:
                 "median_s": float(st.median_s),
                 "spread_s": float(st.spread_s),
                 "xs": [float(v) for v in st.xs],
-                "ys": [float(v) for v in st.ys]}
+                "ys": [float(v) for v in st.ys],
+                "fit_xs": [float(v) for v in st.fit_xs],
+                "fit_ys": [float(v) for v in st.fit_ys],
+                "since_refresh": int(st.since_refresh)}
         nodes = {name: {t: [float(v) for v in logs]
                         for t, logs in s.logs_by_task.items()}
                  for name, s in self.node_stats.items()}
@@ -312,6 +416,10 @@ class OnlinePredictor:
         restarted predictor resumes exactly where the checkpoint left off
         (the fitted base model is reconstructed by the caller; everything
         learned since fit time comes from here)."""
+        with self._state_lock:
+            self._load_state(state)
+
+    def _load_state(self, state: dict) -> None:
         self.version = int(state["version"])
         self.threshold = float(state["threshold"])
         self.tasks = {}
@@ -323,8 +431,11 @@ class OnlinePredictor:
             self.tasks[name] = _TaskState(
                 nig=nig, median_s=float(ts["median_s"]),
                 spread_s=float(ts["spread_s"]),
-                xs=[float(v) for v in ts["xs"]],
-                ys=[float(v) for v in ts["ys"]])
+                xs=deque((float(v) for v in ts["xs"]), maxlen=MAX_BUFFER),
+                ys=deque((float(v) for v in ts["ys"]), maxlen=MAX_BUFFER),
+                fit_xs=[float(v) for v in ts.get("fit_xs", [])],
+                fit_ys=[float(v) for v in ts.get("fit_ys", [])],
+                since_refresh=int(ts.get("since_refresh", 0)))
         self.node_stats = {}
         for node, by_task in state["nodes"].items():
             s = _NodeStats()

@@ -61,11 +61,24 @@ class PredictionService:
     def workflow(self) -> str:
         return self._binding.workflow
 
-    def refresh(self) -> None:
-        """Force a full restack of this namespace's rows and drop the
-        factor cache (incremental dirty-row sync happens automatically on
-        every predict; refresh() is for out-of-band model edits)."""
-        self._binding.sync(full=True)
+    def refresh(self, force: bool = False) -> int:
+        """Resync this namespace.  Returns the number of rows restacked.
+        Generation-aware: when the binding is already current (change
+        cursor at the head of the predictor's feed, synced and
+        factor-cache versions live) this is a no-op — no rows are
+        rewritten and the store generation does not move.  Only a binding
+        that is actually behind pays the full restack + factor-cache drop.
+        (Incremental dirty-row sync still happens automatically on every
+        predict.)
+
+        `force=True` skips the currency check — required for model edits
+        no version counter or change feed can see (mutating a fitted
+        model's fields in place, swapping `base.app_bench` entries):
+        those look 'current' to the binding, so only a forced full sync
+        picks them up."""
+        if not force and self._binding.is_current():
+            return 0
+        return self._binding.sync(full=True)
 
     # ---- batched prediction -------------------------------------------------
     def predict_batch(self, queries: Sequence[PredictionQuery]

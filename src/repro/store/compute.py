@@ -41,6 +41,32 @@ def predict_stacked(x: np.ndarray, post: dict, impl: str = "auto"
     return bayes.predict_blr_np(post, np.asarray(x, np.float64))
 
 
+def fit_stacked(x: np.ndarray, y: np.ndarray, mask: np.ndarray,
+                impl: str = "auto") -> dict:
+    """(T, N) padded/masked observation buffers -> stacked posterior dict
+    (float64 numpy leaves, incl. `alpha`/`n` fit metadata) from ONE batched
+    MacKay evidence fixed-point dispatch.
+
+    This is the fit-side sibling of `predict_stacked`, shared by the
+    posterior maintenance plane (fleet-wide evidence refresh) and any bulk
+    re-fit: TPU gets the fused Pallas kernel with ragged row padding
+    (`kernels.bayes_fit.bayes_fit_ragged`), everywhere else the jit'd vmap
+    of `core.bayes.fit_blr` — either way a fleet of task models re-fits in
+    a single dispatch instead of one fixed-point solve per task."""
+    from repro.core import bayes
+    from repro.kernels import ops
+    import jax.numpy as jnp
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    mj = jnp.asarray(mask, jnp.float32)
+    if impl in ("pallas", "interpret") or (impl == "auto" and ops._on_tpu()):
+        from repro.kernels.bayes_fit import bayes_fit_ragged
+        post = bayes_fit_ragged(xj, yj, mj, interpret=(impl == "interpret"))
+    else:
+        post = bayes.fit_blr_batch(xj, yj, mj)
+    return {k: np.asarray(v, np.float64) for k, v in post.items()}
+
+
 def scale(mean: np.ndarray, std: np.ndarray, factors: np.ndarray
           ) -> Tuple[np.ndarray, np.ndarray]:
     """Extrapolation-factor rescaling (with the mean floor) shared by the

@@ -53,7 +53,16 @@ class AsyncPredictionFrontend:
     def __init__(self, store: PosteriorStore, z: float = 1.96,
                  impl: str = "auto", window_s: float = 0.002,
                  auto_flush: bool = True,
-                 max_pending_batches: Optional[int] = None):
+                 max_pending_batches: Optional[int] = None,
+                 refresher=None, refresh_interval_s: float = 1.0):
+        """`refresher` (an `online.maintenance.FleetRefresher`) attaches
+        the posterior maintenance plane to the serving front-end: the
+        front-end owns its lifecycle — `refresher.start(refresh_interval_s)`
+        here, `refresher.stop()` in close().  The refresh loop runs on the
+        refresher's own daemon thread, OUT OF BAND of the batch window —
+        parked callers are flushed by the worker thread while the refresh
+        fits and publishes, so an evidence refresh never delays an
+        in-flight predict batch."""
         if max_pending_batches is not None and max_pending_batches < 1:
             raise ValueError("max_pending_batches must be >= 1")
         self.store = store
@@ -68,7 +77,10 @@ class AsyncPredictionFrontend:
         self._cv = threading.Condition()
         self._closed = False
         self._worker: Optional[threading.Thread] = None
-        if auto_flush:
+        self._refresher = refresher
+        if refresher is not None:        # before the worker spawns: a
+            refresher.start(refresh_interval_s)   # failing start() must not
+        if auto_flush:                   # leak an unstoppable worker thread
             self._worker = threading.Thread(target=self._loop, daemon=True,
                                             name="posterior-frontend")
             self._worker.start()
@@ -187,6 +199,8 @@ class AsyncPredictionFrontend:
 
     # ---- lifecycle ----------------------------------------------------------
     def close(self) -> None:
+        if self._refresher is not None:
+            self._refresher.stop()
         with self._cv:
             self._closed = True
             self._cv.notify_all()

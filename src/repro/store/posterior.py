@@ -46,8 +46,12 @@ from repro.store.keys import (DEFAULT_TENANT, DEFAULT_WORKFLOW, SEP, TaskKey,
 
 DEFAULT_BLOCK_SIZE = 512
 MANIFEST_NAME = "manifest.json"
-BLOCKS_NAME = "blocks.npz"
-CHECKPOINT_FORMAT = 1
+BLOCKS_NAME = "blocks.npz"           # format-1 checkpoints (read-only compat)
+CHECKPOINT_FORMAT = 2
+
+
+def _block_file(i: int) -> str:
+    return f"block_{i}.npz"
 
 # scale-like leaves default to 1 in unassigned slots so a stray read can
 # never divide by zero (assigned-row reads are guarded by the snapshot)
@@ -215,6 +219,47 @@ class TenantBinding:
                 self._factor_version = base_version
             return len(tasks)
 
+    def is_current(self) -> bool:
+        """True when a sync would be a no-op: the change cursor sits at the
+        head of the predictor's feed, the synced version matches, and the
+        factor cache is scoped to the live base-predictor version.  The
+        generation-aware guard behind PredictionService.refresh()."""
+        with self._sync_lock:
+            if self._detached or self._synced_version is None:
+                return False
+            p = self.predictor
+            if getattr(p, "version", 0) != self._synced_version:
+                return False
+            changed_since = getattr(p, "changed_since", None)
+            if changed_since is not None:
+                tasks, _ = changed_since(self._change_cursor)
+                if tasks:
+                    return False
+            base = getattr(p, "base", p)
+            return getattr(base, "version", 0) == self._factor_version
+
+    def _advance_cursor(self, applied_seqs: Mapping) -> None:
+        """Move the change cursor past rows the maintenance plane already
+        published (caller holds `_sync_lock` and did the put_many).
+        `applied_seqs` maps task -> the change seq captured when its row
+        was exported; the cursor only advances when every pending change
+        belongs to a published task whose seq has not moved since —
+        a concurrent observe() (even on a task that WAS published) keeps
+        the cursor put, so its row stays due for the next sync.  A
+        never-synced binding (resume path) is left alone — its first sync
+        must stay a full restack."""
+        p = self.predictor
+        changed_since = getattr(p, "changed_since", None)
+        seq_of = getattr(p, "change_seq", None)
+        if changed_since is None or seq_of is None \
+                or self._synced_version is None:
+            return
+        tasks, head = changed_since(self._change_cursor)
+        if all(t in applied_seqs and seq_of(t) <= applied_seqs[t]
+               for t in tasks):
+            self._change_cursor = head
+            self._synced_version = getattr(p, "version", 0)
+
     # ---- extrapolation factors ----------------------------------------------
     def base_factor(self, task: str, node: Optional[str]) -> float:
         """Static Section 4.6 factor, cached per base-predictor version
@@ -271,6 +316,16 @@ class PosteriorStore:
                                                  # restored row index)
         self._free_rows: List[int] = []          # heap of evicted row slots
         self._blocks: List[Dict[str, np.ndarray]] = []
+        self._block_gen: Dict[int, int] = {}     # block id -> generation of
+                                                 # its last rewrite (drives
+                                                 # incremental checkpoints)
+        self.last_checkpoint_blocks: List[int] = []   # blocks written by the
+                                                      # most recent save()
+        self._last_save_id: Optional[str] = None  # lineage token of the last
+                                                  # checkpoint this store
+                                                  # wrote or was restored
+                                                  # from (incremental saves
+                                                  # must extend exactly it)
         self._bindings: Dict[Tuple[str, str], TenantBinding] = {}
         self._saved_states: Dict[str, dict] = {}  # namespace -> checkpointed
         self._snap: Optional[StoreSnapshot] = None  # predictor stream state
@@ -302,6 +357,12 @@ class PosteriorStore:
                 workflow: str = DEFAULT_WORKFLOW) -> Optional[TenantBinding]:
         with self._lock:
             return self._bindings.get((tenant, workflow))
+
+    def bindings(self) -> List[TenantBinding]:
+        """Every live namespace binding (the maintenance plane iterates
+        these to find predictors with refresh-due tasks)."""
+        with self._lock:
+            return list(self._bindings.values())
 
     def bind(self, tenant: str, workflow: str, predictor,
              benches: Optional[Mapping] = None, sync: bool = True
@@ -399,6 +460,8 @@ class PosteriorStore:
                         block[leaf][slot] = v
                 self._blocks[bid] = block
             self.generation += 1
+            for bid in touched:                  # incremental checkpoints
+                self._block_gen[bid] = self.generation   # persist only these
             self._snap = None
 
     # ---- reads --------------------------------------------------------------
@@ -417,11 +480,21 @@ class PosteriorStore:
         return self.snapshot().gather(keys)
 
     # ---- checkpoint / restore -----------------------------------------------
-    def save(self, path: str) -> str:
-        """Write blocks (npz) + manifest (JSON): key index, generation, and
-        each bound predictor's streaming state via `export_state()` (NIG
-        posteriors, node-correction logs, observation buffers).  JSON float
-        repr round-trips float64 exactly, so restore is bit-identical."""
+    def save(self, path: str, incremental: bool = False) -> str:
+        """Write per-block npz files + a manifest (JSON): key index,
+        generation, per-block generations, and each bound predictor's
+        streaming state via `export_state()` (NIG posteriors,
+        node-correction logs, observation buffers).  JSON float repr
+        round-trips float64 exactly, so restore is bit-identical.
+
+        `incremental=True` is the generation-delta mode: against the
+        manifest already at `path`, only blocks whose generation moved are
+        rewritten (a fleet refresh rewrites a handful of blocks in one
+        generation — its checkpoint should cost a handful of files, not
+        the whole stack) and files of blocks released by evict() are
+        removed.  The manifest is always rewritten, so the directory is a
+        complete, self-contained checkpoint after every save.  The block
+        ids actually written land in `last_checkpoint_blocks`."""
         os.makedirs(path, exist_ok=True)
         with self._lock:
             bindings = list(self._bindings.values())
@@ -430,9 +503,48 @@ class PosteriorStore:
                            # an observe() with no predict since must not
                            # checkpoint new state over a pre-observe row
         with self._lock:
-            arrays = {f"b{i}__{leaf}": blk[leaf]
-                      for i, blk in enumerate(self._blocks)
-                      for leaf in LEAVES if blk is not None}
+            prev_gen: Optional[Dict[int, int]] = None
+            if incremental:
+                mpath = os.path.join(path, MANIFEST_NAME)
+                if not os.path.exists(mpath):
+                    raise FileNotFoundError(
+                        f"incremental save needs an existing checkpoint at "
+                        f"{path!r}; do a full save first")
+                with open(mpath) as f:
+                    prev = json.load(f)
+                if (prev.get("format") != CHECKPOINT_FORMAT
+                        or prev.get("block_size") != self.block_size):
+                    raise ValueError(
+                        f"cannot incrementally extend checkpoint at "
+                        f"{path!r}: format/block_size mismatch")
+                if prev.get("save_id") is None \
+                        or prev.get("save_id") != self._last_save_id:
+                    # bare generation counters are NOT comparable across
+                    # divergent histories (a store restarted from an older
+                    # checkpoint can reach the same generation number with
+                    # different block contents) — only the store that wrote
+                    # or restored this exact checkpoint may extend it
+                    raise ValueError(
+                        f"checkpoint at {path!r} was not written by (or "
+                        f"restored into) this store — its history may have "
+                        f"diverged; do a full save instead")
+                prev_gen = {int(k): int(v)
+                            for k, v in prev.get("block_gen", {}).items()}
+            to_write, to_delete = [], []
+            block_gen_out: Dict[str, int] = {}
+            for i, blk in enumerate(self._blocks):
+                if blk is None:                  # released by evict()
+                    if prev_gen is None or i in prev_gen:
+                        to_delete.append(i)
+                    continue
+                # setdefault: blocks with no tracked generation (restored
+                # from a legacy checkpoint) get one stable value — a moving
+                # fallback would make every incremental save rewrite them
+                g = self._block_gen.setdefault(i, self.generation)
+                block_gen_out[str(i)] = g
+                if prev_gen is not None and prev_gen.get(i) == g:
+                    continue                     # unchanged since last save
+                to_write.append((i, {leaf: blk[leaf] for leaf in LEAVES}))
             # start from restored-but-not-resumed namespace states so a
             # partial resume + re-save never drops another tenant's
             # checkpointed streaming state; live bindings overwrite theirs
@@ -440,23 +552,47 @@ class PosteriorStore:
             for b in self._bindings.values():
                 exp = getattr(b.predictor, "export_state", None)
                 states[b.namespace] = exp() if exp is not None else None
+            save_id = os.urandom(8).hex()
             manifest = {"format": CHECKPOINT_FORMAT,
                         "block_size": self.block_size,
                         "generation": self.generation,
+                        "save_id": save_id,
+                        "n_blocks": len(self._blocks),
+                        "block_gen": block_gen_out,
                         "rows": dict(self._rows),
                         "namespaces": states}
-        np.savez(os.path.join(path, BLOCKS_NAME), **arrays)
-        with open(os.path.join(path, MANIFEST_NAME), "w") as f:
+        # crash-safe ordering: stage new block files under temp names and
+        # atomically rename them into place, THEN replace the manifest,
+        # THEN delete evicted blocks' files.  A crash at any point leaves a
+        # manifest (old or new) whose referenced block files all exist and
+        # are complete — never a truncated npz or a dangling row index.
+        for i, arrs in to_write:
+            tmp = os.path.join(path, _block_file(i) + ".tmp")
+            with open(tmp, "wb") as f:       # file handle: np.savez must not
+                np.savez(f, **arrs)          # append .npz to the temp name
+            os.replace(tmp, os.path.join(path, _block_file(i)))
+        mtmp = os.path.join(path, MANIFEST_NAME + ".tmp")
+        with open(mtmp, "w") as f:
             json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(path, MANIFEST_NAME))
+        for i in to_delete:
+            try:
+                os.remove(os.path.join(path, _block_file(i)))
+            except FileNotFoundError:
+                pass
+        with self._lock:
+            self._last_save_id = save_id
+        self.last_checkpoint_blocks = [i for i, _ in to_write]
         return path
 
     @classmethod
     def restore(cls, path: str) -> "PosteriorStore":
         with open(os.path.join(path, MANIFEST_NAME)) as f:
             manifest = json.load(f)
-        if manifest.get("format") != CHECKPOINT_FORMAT:
+        fmt = manifest.get("format")
+        if fmt not in (1, CHECKPOINT_FORMAT):
             raise ValueError(f"unsupported checkpoint format in {path!r}: "
-                             f"{manifest.get('format')!r}")
+                             f"{fmt!r}")
         store = cls(block_size=manifest["block_size"])
         rows = {k: int(v) for k, v in manifest["rows"].items()}
         if rows:
@@ -466,15 +602,37 @@ class PosteriorStore:
                                  f"(checkpoint {path!r})")
         store._rows = rows
         store._next_row = max(rows.values()) + 1 if rows else 0
-        n_blocks = -(-store._next_row // store.block_size)
-        with np.load(os.path.join(path, BLOCKS_NAME)) as z:
-            store._blocks = [{leaf: (np.array(z[f"b{i}__{leaf}"], np.float64)
-                                     if f"b{i}__{leaf}" in z.files
-                                     else _new_block(store.block_size)[leaf])
-                              for leaf in LEAVES} for i in range(n_blocks)]
+        n_blocks = max(int(manifest.get("n_blocks", 0)),
+                       -(-store._next_row // store.block_size))
+        live_bids = {r // store.block_size for r in rows.values()}
+        if fmt == 1:                 # legacy single-npz layout (read-only)
+            with np.load(os.path.join(path, BLOCKS_NAME)) as z:
+                store._blocks = [
+                    {leaf: (np.array(z[f"b{i}__{leaf}"], np.float64)
+                            if f"b{i}__{leaf}" in z.files
+                            else _new_block(store.block_size)[leaf])
+                     for leaf in LEAVES} for i in range(n_blocks)]
+        else:
+            store._blocks = []
+            for i in range(n_blocks):
+                fpath = os.path.join(path, _block_file(i))
+                if os.path.exists(fpath):
+                    with np.load(fpath) as z:
+                        store._blocks.append(
+                            {leaf: (np.array(z[leaf], np.float64)
+                                    if leaf in z.files
+                                    else _new_block(store.block_size)[leaf])
+                             for leaf in LEAVES})
+                elif i in live_bids:   # tolerated: self-repairs on resume
+                    store._blocks.append(_new_block(store.block_size))
+                else:                  # released before the checkpoint
+                    store._blocks.append(None)
         store.generation = int(manifest["generation"])
-        store._saved_states = manifest.get("namespaces") or {}
-        return store
+        store._block_gen = {int(k): int(v)
+                            for k, v in manifest.get("block_gen", {}).items()}
+        store._last_save_id = manifest.get("save_id")   # restored state ==
+        store._saved_states = manifest.get("namespaces") or {}   # this ckpt:
+        return store                                    # may extend it
 
     def resume(self, tenant: str, workflow: str, predictor,
                benches: Optional[Mapping] = None) -> TenantBinding:
@@ -537,6 +695,7 @@ class PosteriorStore:
             for bid in range(len(self._blocks)):
                 if bid not in live_bids:
                     self._blocks[bid] = None
-            self.generation += 1
+                    self._block_gen.pop(bid, None)   # released: incremental
+            self.generation += 1                     # saves drop its file
             self._snap = None
             return len(victims)

@@ -1,0 +1,398 @@
+"""Posterior maintenance plane: refresh policy triggers, fleet-wide
+single-dispatch/single-generation refresh, out-of-band serving isolation,
+generation-aware service refresh, and incremental (generation-delta)
+checkpoints."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import bayes
+from repro.core.microbench import simulate_microbench
+from repro.core.predictor import LotaruPredictor
+from repro.core.traces import TraceRow
+from repro.online import (FleetRefresher, OnlinePredictor, PredictionService,
+                          RefreshPolicy, TaskCompletion)
+from repro.online.events import PredictionQuery
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+from repro.store import AsyncPredictionFrontend, PosteriorStore, TaskKey
+
+
+def _traces(task="bwa", n=6, slope=30.0, base=4.0):
+    return [TraceRow("wf", task, "local", s, base + slope * s)
+            for s in np.linspace(0.05, 0.4, n)]
+
+
+def _fit(tasks=("bwa", "idx")):
+    lot = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    traces = []
+    for j, t in enumerate(tasks):
+        traces += _traces(t, slope=20.0 + 7 * j, base=2.0 + j)
+    return lot.fit(traces)
+
+
+def _benches():
+    return {n.name: simulate_microbench(n, 1) for n in TARGET_MACHINES}
+
+
+def _observe_local(online, task, n, rng, slope=35.0, base=4.0, noise=0.5):
+    for i in range(n):
+        x = float(rng.uniform(0.5, 6.0))
+        online.observe(TaskCompletion(
+            "wf", f"{task}-{i}", task, "local", x,
+            float(base + slope * x + rng.normal(0, noise))))
+
+
+# --- refresh policy triggers ----------------------------------------------------
+def test_refresh_due_every_n_completions(rng):
+    online = OnlinePredictor(_fit(("bwa", "idx")))
+    policy = RefreshPolicy(every_n=5)
+    _observe_local(online, "bwa", 4, rng)
+    assert online.refresh_due(policy) == []
+    _observe_local(online, "bwa", 1, rng)
+    assert online.refresh_due(policy) == ["bwa"]      # idx has no stream
+    # a refresh resets the counter
+    snap = online.refresh_snapshot(["bwa"])["bwa"]
+    post = bayes.refresh_fit([], [], snap[1], snap[2])
+    assert online.apply_refresh("bwa", post, seq=snap[0])
+    assert online.refresh_due(policy) == []
+
+
+def test_refresh_due_evidence_drift_trigger(rng):
+    """streamed noise far above the lift-time level trips the drift
+    trigger long before the periodic counter would."""
+    online = OnlinePredictor(_fit(("bwa",)))
+    policy = RefreshPolicy(every_n=10 ** 6, drift_ratio=3.0)
+    assert online.refresh_due(policy) == []
+    # fit noise is ~0 (exact line); stream wildly noisy observations
+    _observe_local(online, "bwa", 6, rng, noise=80.0)
+    assert online.refresh_due(policy) == ["bwa"]
+    st = online.tasks["bwa"]
+    ratio = (st.nig["b"] / st.nig["a"]) / st.nig["s2_lift"]
+    assert ratio > 3.0
+
+
+def test_apply_refresh_rejects_stale_fit(rng):
+    """an observation landing between snapshot and apply must win: the
+    stale fit is rejected and the task stays due."""
+    online = OnlinePredictor(_fit(("bwa",)))
+    _observe_local(online, "bwa", 5, rng)
+    seq, x, y = online.refresh_snapshot(["bwa"])["bwa"]
+    post = bayes.refresh_fit([], [], x, y)
+    _observe_local(online, "bwa", 1, rng)           # race: new observation
+    before = online.predict("bwa", 3.0)
+    assert not online.apply_refresh("bwa", post, seq=seq)
+    assert online.predict("bwa", 3.0) == before
+    assert online.refresh_due(RefreshPolicy(every_n=5)) == ["bwa"]
+
+
+# --- fleet-wide batched refresh -------------------------------------------------
+def test_fleet_refresh_one_generation_across_tenants(rng):
+    """two tenants' due tasks are refreshed by ONE dispatch and published
+    in ONE copy-on-write generation; the refreshed predictive matches the
+    scalar one-shot refresh_fit reference."""
+    store = PosteriorStore()
+    onlines, svcs = {}, {}
+    for tenant in ("acme", "globex"):
+        online = OnlinePredictor(_fit(("bwa", "idx")))
+        onlines[tenant] = online
+        svcs[tenant] = PredictionService(online, store=store, tenant=tenant,
+                                         workflow="w")
+        _observe_local(online, "bwa", 6, rng)
+        _observe_local(online, "idx", 6, rng, slope=12.0)
+        svcs[tenant].predict_batch([PredictionQuery("bwa", None, 1.0)])
+
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=4))
+    due = refresher.due()
+    assert {(b.tenant, t) for b, t in due} == {
+        ("acme", "bwa"), ("acme", "idx"),
+        ("globex", "bwa"), ("globex", "idx")}
+    gen0 = store.generation
+    report = refresher.refresh()
+    assert report.n_dispatches == 1
+    assert report.n_tasks == 4
+    assert report.n_tenants == 2
+    assert store.generation == gen0 + 1            # ONE generation for all
+
+    for tenant, online in onlines.items():
+        for task in ("bwa", "idx"):
+            st = online.tasks[task]
+            ref = bayes.nig_to_blr(bayes.nig_from_blr(
+                bayes.refresh_fit(st.fit_xs, st.fit_ys, st.xs, st.ys)))
+            got = svcs[tenant].predict_batch(
+                [PredictionQuery(task, None, 3.0)])[0][0]
+            want, _ = bayes.predict_blr_np(ref, 3.0)
+            assert got == pytest.approx(max(float(want), 1e-3), rel=2e-3)
+    # the publish advanced the cursors: the next predict re-syncs nothing
+    gen1 = store.generation
+    svcs["acme"].predict_batch([PredictionQuery("bwa", None, 1.0)])
+    assert store.generation == gen1
+
+
+def test_refresh_preserves_streamed_only_observations(rng):
+    """a promoted median-fallback task has NO fit-time regression data:
+    its refresh refits on the streamed buffer alone (streamed-only
+    observations preserved, downsampled medians never resurrected)."""
+    rows = [TraceRow("wf", "multiqc", "local", s, r)
+            for s, r in zip([0.1, 0.2, 0.3, 0.4], [30, 29, 31, 30])]
+    lot = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    lot.fit(rows)
+    online = OnlinePredictor(lot)
+    assert online.tasks["multiqc"].fit_xs == []     # median task: no fit data
+    xs, ys = [], []
+    for i in range(8):                              # strong correlation at
+        x = 2.0 + 3.0 * i                           # production scale ->
+        y = 10.0 + 12.0 * x + float(rng.normal(0, 0.1))   # promotion
+        online.observe(TaskCompletion("wf", f"m{i}", "multiqc", "local",
+                                      x, y))
+        xs.append(x)
+        ys.append(y)
+    assert online.tasks["multiqc"].nig is not None  # promoted
+    _observe_local(online, "multiqc", 4, rng, slope=12.0, base=10.0,
+                   noise=0.1)
+    store = PosteriorStore()
+    svc = PredictionService(online, store=store)
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=1))
+    report = refresher.refresh()
+    assert report.n_tasks == 1
+    st = online.tasks["multiqc"]
+    ref = bayes.nig_to_blr(bayes.nig_from_blr(
+        bayes.refresh_fit([], [], st.xs, st.ys)))
+    got = svc.predict_batch([PredictionQuery("multiqc", None, 20.0)])[0][0]
+    want, _ = bayes.predict_blr_np(ref, 20.0)
+    assert got == pytest.approx(float(want), rel=2e-3)
+
+
+def test_refresh_out_of_band_snapshot_isolation(rng):
+    """readers holding a pre-refresh snapshot keep serving it; the refresh
+    lands as one atomic generation — in-flight predict batches are never
+    blocked on (or torn by) a refresh."""
+    store = PosteriorStore()
+    online = OnlinePredictor(_fit(("bwa", "idx")))
+    svc = PredictionService(online, store=store)
+    _observe_local(online, "bwa", 6, rng)
+    svc.predict_batch([PredictionQuery("bwa", None, 1.0)])
+    old_snap = store.snapshot()
+    key = TaskKey("default", "default", "bwa")
+    before = old_snap.get(key)
+    report = FleetRefresher(store, RefreshPolicy(every_n=4)).refresh()
+    assert report.generation == old_snap.generation + 1
+    for leaf, v in old_snap.get(key).items():       # old view untouched
+        np.testing.assert_array_equal(v, before[leaf])
+    assert not np.array_equal(store.snapshot().get(key)["sigma"],
+                              before["sigma"])
+
+
+def test_refresher_noop_when_nothing_due(rng):
+    store = PosteriorStore()
+    online = OnlinePredictor(_fit(("bwa",)))
+    PredictionService(online, store=store)
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=4))
+    assert refresher.maybe_refresh() is None
+    assert refresher.dispatch_count == 0
+    report = refresher.refresh()                    # explicit call: no rows
+    assert report.n_tasks == 0 and report.n_dispatches == 0
+
+
+def test_frontend_runs_refresh_out_of_band(rng):
+    """the front-end's maintenance thread refreshes due posteriors while
+    the batch window keeps answering predict callers."""
+    store = PosteriorStore()
+    online = OnlinePredictor(_fit(("bwa", "idx")))
+    svc = PredictionService(online, store=store)
+    svc.predict_batch([PredictionQuery("bwa", None, 1.0)])
+    _observe_local(online, "bwa", 8, rng)
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=4))
+    with AsyncPredictionFrontend(store, window_s=0.005, refresher=refresher,
+                                 refresh_interval_s=0.005) as fe:
+        deadline = time.time() + 30.0
+        while refresher.dispatch_count == 0 and time.time() < deadline:
+            out = fe.predict([PredictionQuery("bwa", None, 2.0)])
+            assert out.shape == (1, 3)
+        assert refresher.dispatch_count >= 1
+        # post-refresh serving matches the service path bit-for-bit
+        np.testing.assert_array_equal(
+            fe.predict([PredictionQuery("bwa", None, 2.0)]),
+            svc.predict_batch([PredictionQuery("bwa", None, 2.0)]))
+    assert online.tasks["bwa"].since_refresh < 8    # refresh really landed
+
+
+# --- generation-aware service refresh (docstring/behavior fix) ------------------
+def test_service_refresh_is_generation_aware(rng):
+    """refresh() no-ops when the binding cursor is current — no row
+    rewrites, no generation bump; it restacks only when actually behind."""
+    store = PosteriorStore()
+    online = OnlinePredictor(_fit(("bwa", "idx")))
+    svc = PredictionService(online, store=store)
+    svc.predict_batch([PredictionQuery("bwa", None, 1.0)])   # fully synced
+    gen = store.generation
+    assert svc.refresh() == 0
+    assert store.generation == gen                  # no-op: nothing moved
+    online.observe(TaskCompletion("wf", "u0", "bwa", "local", 2.0, 90.0))
+    assert svc.refresh() == 2                       # full restack when stale
+    assert store.generation == gen + 1
+    assert svc.refresh() == 0                       # current again
+
+
+def test_service_refresh_noop_for_static_predictor():
+    svc = PredictionService(_fit(("bwa",)))
+    svc.predict_batch([PredictionQuery("bwa", None, 1.0)])
+    gen = svc.store.generation
+    assert svc.refresh() == 0
+    assert svc.store.generation == gen
+    svc.predictor.fit(_traces("bwa", slope=50.0))   # out-of-band model edit
+    assert svc.refresh() == 1                       # restacked
+    m = svc.predict_batch([PredictionQuery("bwa", None, 2.0)])[0][0]
+    assert m == pytest.approx(svc.predictor.predict("bwa", 2.0)[0], rel=1e-6)
+
+
+# --- ragged batched fit kernel --------------------------------------------------
+def test_bayes_fit_ragged_pads_rows_and_tasks():
+    """per-row masks + task-dimension padding: a task count that is not a
+    block multiple still fits in one pallas_call, exactly."""
+    import jax.numpy as jnp
+    from repro.kernels.bayes_fit import bayes_fit_ragged, pad_ragged
+    rng = np.random.default_rng(7)
+    xs_list, ys_list = [], []
+    for i in range(6):                               # ragged lengths 3..14
+        n = 3 + 2 * i
+        x = rng.uniform(0.1, 5.0, n)
+        xs_list.append(x)
+        ys_list.append(2 + (4 + i) * x + rng.normal(0, 0.05, n))
+    x, y, m = pad_ragged(xs_list, ys_list, col_bucket=1)
+    assert x.shape == (6, 13)                        # unbucketed: exact max
+    assert pad_ragged(xs_list, ys_list)[0].shape == (6, 64)   # jit bucket
+    post = bayes_fit_ragged(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
+                            block_tasks=4, interpret=True)   # 6 -> pad to 8
+    assert post["mu"].shape == (6, 2)
+    for i in range(6):
+        ref = bayes.fit_blr(xs_list[i].astype(np.float32),
+                            np.asarray(ys_list[i], np.float32))
+        np.testing.assert_allclose(np.asarray(post["mu"][i]),
+                                   np.asarray(ref["mu"]),
+                                   rtol=5e-3, atol=5e-4)
+        np.testing.assert_allclose(float(post["n"][i]), len(xs_list[i]))
+
+
+def test_pad_ragged_rejects_mismatched_rows():
+    from repro.kernels.bayes_fit import pad_ragged
+    with pytest.raises(ValueError, match="row 1"):
+        pad_ragged([[1.0], [1.0, 2.0]], [[1.0], [1.0]])
+
+
+# --- incremental (generation-delta) checkpoints ---------------------------------
+def _warm_service(store, tenant, tasks, rng):
+    online = OnlinePredictor(_fit(tasks), benches=_benches())
+    svc = PredictionService(online, _benches(), store=store, tenant=tenant,
+                            workflow="w")
+    for t in tasks:
+        _observe_local(online, t, 5, rng)
+    svc.predict_batch([PredictionQuery(tasks[0], None, 1.0)])
+    return online, svc
+
+
+def test_incremental_save_writes_only_rewritten_blocks(tmp_path, rng):
+    store = PosteriorStore(block_size=2)
+    online, svc = _warm_service(store, "t", ("a0", "a1", "a2", "a3"), rng)
+    path = str(tmp_path / "ckpt")
+    store.save(path)
+    assert sorted(store.last_checkpoint_blocks) == [0, 1]    # full: all
+    # touch exactly one task -> one block dirty
+    online.observe(TaskCompletion("wf", "u", "a0", "local", 2.0, 77.0))
+    svc.predict_batch([PredictionQuery("a0", None, 1.0)])
+    row = store.snapshot().row_of(TaskKey("t", "w", "a0"))
+    store.save(path, incremental=True)
+    assert store.last_checkpoint_blocks == [row // 2]        # delta: one
+    restored = PosteriorStore.restore(path)
+    online2 = OnlinePredictor(_fit(("a0", "a1", "a2", "a3")),
+                              benches=_benches())
+    restored.resume("t", "w", online2, _benches())
+    svc2 = PredictionService(online2, _benches(), store=restored, tenant="t",
+                             workflow="w")
+    qs = [PredictionQuery(t, None, 1.5) for t in ("a0", "a1", "a2", "a3")]
+    np.testing.assert_array_equal(svc2.predict_batch(qs),
+                                  svc.predict_batch(qs))
+
+
+def test_incremental_save_requires_existing_checkpoint(tmp_path):
+    store = PosteriorStore()
+    PredictionService(_fit(("bwa",)), store=store)
+    with pytest.raises(FileNotFoundError, match="full save first"):
+        store.save(str(tmp_path / "nope"), incremental=True)
+
+
+def test_incremental_save_refuses_foreign_checkpoint(tmp_path, rng):
+    """generation counters are not comparable across divergent histories:
+    only the store that wrote (or restored) a checkpoint may extend it —
+    any other store must do a full save.  A restored store MAY extend the
+    checkpoint it came from."""
+    store_a = PosteriorStore()
+    _warm_service(store_a, "t", ("bwa",), rng)
+    path = str(tmp_path / "c")
+    store_a.save(path)
+    # a different store (same shape, same generation numbers) must refuse
+    store_b = PosteriorStore()
+    _warm_service(store_b, "t", ("bwa",), rng)
+    with pytest.raises(ValueError, match="diverged"):
+        store_b.save(path, incremental=True)
+    # restore -> incremental extend of the same lineage is allowed
+    restored = PosteriorStore.restore(path)
+    online = OnlinePredictor(_fit(("bwa",)), benches=_benches())
+    restored.resume("t", "w", online, _benches())
+    online.observe(TaskCompletion("wf", "u", "bwa", "local", 2.0, 50.0))
+    restored.save(path, incremental=True)
+    assert PosteriorStore.restore(path).generation == restored.generation
+
+
+def test_checkpoint_lifecycle_evict_refresh_incremental_restore(tmp_path,
+                                                                rng):
+    """the satellite lifecycle: save -> evict a namespace -> refresh ->
+    incremental save -> restore resumes warm with bit-identical
+    predictions, and the restored store never serves a pre-refresh
+    generation (or the evicted rows)."""
+    store = PosteriorStore(block_size=2)
+    online_a, svc_a = _warm_service(store, "a", ("a0", "a1", "a2"), rng)
+    online_b, svc_b = _warm_service(store, "b", ("b0", "b1"), rng)
+    path = str(tmp_path / "ckpt")
+    store.save(path)
+
+    assert store.evict("a", "w") == 3
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=4))
+    report = refresher.refresh()
+    assert report.n_tasks == 2 and report.n_tenants == 1     # tenant b only
+    store.save(path, incremental=True)
+    # the delta rewrote only tenant b's block(s); tenant a's block files
+    # are gone from the checkpoint directory
+    qs = [PredictionQuery(t, None, 2.5) for t in ("b0", "b1")]
+    expected = svc_b.predict_batch(qs)
+
+    restored = PosteriorStore.restore(path)
+    assert restored.generation == store.generation
+    assert restored.snapshot().generation >= report.generation
+    with pytest.raises(KeyError):
+        restored.snapshot().row_of(TaskKey("a", "w", "a0"))
+    online_b2 = OnlinePredictor(_fit(("b0", "b1")), benches=_benches())
+    restored.resume("b", "w", online_b2, _benches())
+    svc_b2 = PredictionService(online_b2, _benches(), store=restored,
+                               tenant="b", workflow="w")
+    np.testing.assert_array_equal(svc_b2.predict_batch(qs), expected)
+    # resumed state is warm: counters and buffers came back, so the next
+    # refresh behaves identically on both sides
+    assert online_b2.export_state() == online_b.export_state()
+
+
+def test_evicted_block_file_removed_on_incremental_save(tmp_path, rng):
+    store = PosteriorStore(block_size=2)
+    _warm_service(store, "a", ("a0", "a1"), rng)     # rows 0-1 -> block 0
+    _warm_service(store, "b", ("b0", "b1"), rng)     # rows 2-3 -> block 1
+    path = str(tmp_path / "c")
+    store.save(path)
+    assert os.path.exists(os.path.join(path, "block_0.npz"))
+    store.evict("a", "w")
+    store.save(path, incremental=True)
+    assert not os.path.exists(os.path.join(path, "block_0.npz"))
+    assert os.path.exists(os.path.join(path, "block_1.npz"))
+    restored = PosteriorStore.restore(path)
+    assert restored.num_free_blocks == 1             # released block stays
+    assert restored.get(TaskKey("b", "w", "b0"))["mu"].shape == (2,)

@@ -1,0 +1,171 @@
+"""Property-based equivalence suite for the posterior maintenance plane.
+
+The load-bearing invariant: streaming `nig_update` x K followed by a
+periodic evidence refresh must land on the SAME posterior as one one-shot
+`bayes_fit` over the concatenated (fit-time + streamed) observations —
+mean/cov by moment matching, predictive quantiles within tolerance — for
+*random* observation streams, not just the hand-picked ones.
+
+Runs under the real `hypothesis` when installed, else under the
+deterministic `tests/_hypothesis_fallback.py` shim (same @given surface).
+The nightly CI job raises the example budget via PROPERTY_MAX_EXAMPLES.
+"""
+import os
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bayes
+
+MAX_EXAMPLES = int(os.environ.get("PROPERTY_MAX_EXAMPLES", "15"))
+Z95 = 1.645
+
+
+def _stream(seed: int, k: int):
+    """Random fit-time points (downsampled scale) + K streamed production-
+    scale observations from a noisy linear truth."""
+    rng = np.random.default_rng(seed)
+    slope = float(rng.uniform(5.0, 60.0))
+    base = float(rng.uniform(0.5, 20.0))
+    n0 = int(rng.integers(3, 9))
+    x0 = rng.uniform(0.05, 0.5, n0)
+    y0 = base + slope * x0 + rng.normal(0, 0.2, n0)
+    xs = rng.uniform(0.5, 8.0, k)
+    ys = base + slope * xs + rng.normal(0, 1.0, k)
+    return x0, y0, xs, ys
+
+
+def _fit(x, y) -> dict:
+    return {k: np.asarray(v) for k, v in
+            bayes.fit_blr(np.asarray(x, np.float32),
+                          np.asarray(y, np.float32)).items()}
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), k=st.integers(1, 24))
+def test_stream_then_refresh_equals_oneshot_fit(seed, k):
+    """nig_update x K then refresh == one bayes_fit on everything."""
+    x0, y0, xs, ys = _stream(seed, k)
+    nig = bayes.nig_from_blr(_fit(x0, y0))
+    for a, b in zip(xs, ys):
+        nig = bayes.nig_update(nig, float(a), float(b))
+    assert nig["n_obs"] == k                      # stream actually folded in
+
+    refreshed = bayes.nig_to_blr(
+        bayes.nig_from_blr(bayes.refresh_fit(x0, y0, xs, ys)))
+    oneshot = _fit(np.concatenate([x0, xs]), np.concatenate([y0, ys]))
+
+    np.testing.assert_allclose(refreshed["mu"], oneshot["mu"],
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(refreshed["sigma"], oneshot["sigma"],
+                               rtol=1e-4, atol=1e-8)
+    for xq in (0.2, 3.0, 12.0):
+        m1, s1 = bayes.predict_blr_np(refreshed, xq)
+        m2, s2 = bayes.predict_blr_np(oneshot, xq)
+        q1, q2 = m1 + Z95 * s1, m2 + Z95 * s2
+        assert abs(q1 - q2) <= 1e-4 * max(abs(float(q2)), 1.0)
+        assert abs(m1 - m2) <= 1e-4 * max(abs(float(m2)), 1.0)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), k=st.integers(1, 40))
+def test_nig_update_chain_equals_closed_form_refit(seed, k):
+    """the conjugate exactness oracle on random streams: folding points in
+    one at a time == nig_refit on all of them at once."""
+    x0, y0, xs, ys = _stream(seed, k)
+    nig0 = bayes.nig_from_blr(_fit(x0, y0))
+    inc = nig0
+    for a, b in zip(xs, ys):
+        inc = bayes.nig_update(inc, float(a), float(b))
+    bat = bayes.nig_refit(nig0, xs, ys)
+    np.testing.assert_allclose(inc["mu"], bat["mu"], rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(inc["v"], bat["v"], rtol=1e-8, atol=1e-12)
+    assert abs(inc["a"] - bat["a"]) < 1e-9
+    assert abs(inc["b"] - bat["b"]) <= 1e-6 * max(abs(bat["b"]), 1.0)
+
+
+@settings(max_examples=max(MAX_EXAMPLES // 2, 5), deadline=None)
+@given(seed=st.integers(0, 2 ** 20), t=st.integers(1, 12))
+def test_batched_ragged_fit_matches_per_row_scalar_fit(seed, t):
+    """fit_stacked over ragged padded/masked buffers == fit_blr per row
+    (the padding/masking must be an exact no-op)."""
+    from repro.kernels.bayes_fit import pad_ragged
+    from repro.store.compute import fit_stacked
+    rng = np.random.default_rng(seed)
+    xs_list, ys_list = [], []
+    for i in range(t):
+        n = int(rng.integers(3, 20))
+        x = rng.uniform(0.05, 6.0, n)
+        y = 2 + (5 + 3 * i) * x + rng.normal(0, 0.3, n)
+        xs_list.append(x)
+        ys_list.append(y)
+    x, y, m = pad_ragged(xs_list, ys_list)
+    post = fit_stacked(x, y, m)
+    for i in range(t):
+        ref = _fit(xs_list[i], ys_list[i])
+        for xq in (0.5, 4.0):
+            m1, s1 = bayes.predict_blr_np(
+                {k: v[i] for k, v in post.items()}, xq)
+            m2, s2 = bayes.predict_blr_np(ref, xq)
+            q1, q2 = m1 + Z95 * s1, m2 + Z95 * s2
+            assert abs(q1 - q2) <= 2e-3 * max(abs(float(q2)), 1.0), (i, xq)
+
+
+@settings(max_examples=max(MAX_EXAMPLES // 3, 4), deadline=None)
+@given(seed=st.integers(0, 2 ** 20), k=st.integers(3, 20))
+def test_fleet_refresh_quantiles_match_oneshot_reference(seed, k):
+    """end-to-end through the maintenance plane: after FleetRefresher's
+    batched refresh, the predictive quantiles served for each task match
+    the scalar one-shot-fit reference within tolerance (the acceptance
+    bar for the whole refresh path)."""
+    from repro.core.microbench import simulate_microbench
+    from repro.core.predictor import LotaruPredictor
+    from repro.core.traces import TraceRow
+    from repro.online import (FleetRefresher, OnlinePredictor,
+                              PredictionService, RefreshPolicy,
+                              TaskCompletion)
+    from repro.sched.cluster import LOCAL
+    from repro.store import PosteriorStore
+
+    rng = np.random.default_rng(seed)
+    tasks = ("bwa", "idx")
+    traces = []
+    for j, task in enumerate(tasks):
+        slope, base = 20.0 + 9 * j, 3.0 + j
+        traces += [TraceRow("wf", task, "local", s, base + slope * s)
+                   for s in np.linspace(0.05, 0.4, 6)]
+    lot = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    lot.fit(traces)
+    online = OnlinePredictor(lot)
+    store = PosteriorStore()
+    svc = PredictionService(online, store=store)
+    streamed = {task: ([], []) for task in tasks}
+    for i in range(k):
+        task = tasks[i % 2]
+        x = float(rng.uniform(0.5, 6.0))
+        y = float(3 + 30 * x + rng.normal(0, 0.5))
+        online.observe(TaskCompletion("wf", f"u{i}", task, "local", x, y))
+        streamed[task][0].append(x)
+        streamed[task][1].append(y)
+
+    refresher = FleetRefresher(store, RefreshPolicy(every_n=1))
+    report = refresher.refresh()
+    assert report.n_dispatches == 1
+
+    for task in tasks:
+        xs, ys = streamed[task]
+        if not xs:
+            continue
+        st_ = online.tasks[task]
+        ref = bayes.nig_to_blr(bayes.nig_from_blr(
+            bayes.refresh_fit(st_.fit_xs, st_.fit_ys, xs, ys)))
+        for xq in (1.0, 5.0):
+            from repro.online.events import PredictionQuery
+            mean, lo, hi = svc.predict_batch(
+                [PredictionQuery(task, None, xq)])[0]
+            m2, s2 = bayes.predict_blr_np(ref, xq)
+            hi2 = max(float(m2), 1e-3) + svc.z * float(s2)
+            assert abs(hi - hi2) <= 2e-3 * max(abs(hi2), 1.0), (task, xq)
+            assert abs(mean - max(float(m2), 1e-3)) \
+                <= 2e-3 * max(abs(float(m2)), 1.0), (task, xq)

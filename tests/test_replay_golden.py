@@ -1,0 +1,138 @@
+"""Golden-replay regression test for the adaptive execution pipeline.
+
+One `execute_adaptive` run — the Section 8.1-style 20-node straggler
+scenario with speculation enabled — is recorded to a checked-in JSON
+fixture: every completion event, the final assignment, the speculation
+counters, and a post-run sweep of served predictions.  The test replays
+the scenario and asserts BIT-IDENTICAL output (JSON float repr round-trips
+float64 exactly), so future refactors of the event loop, the decision
+plane, or the maintenance plane cannot silently drift the executed
+schedule or the served numbers.
+
+Regenerate (only when an intentional behavior change is being made):
+
+  PYTHONPATH=src:. python tests/test_replay_golden.py --regen
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.core.microbench import simulate_microbench
+from repro.core.predictor import LotaruPredictor
+from repro.online import OnlinePredictor, OnlineReschedulingPlanner
+from repro.online.events import PredictionQuery
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+from repro.workflow.generator import GroundTruth, build_workflow
+from repro.workflow.profiling import local_profiling
+from repro.workflow.simulator import (SpeculationPolicy, execute_adaptive,
+                                      random_cluster)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "golden_replay.json")
+WORKFLOW = "eager"
+SEED = 0
+N_NODES = 20
+STRAGGLER_FRAC = 0.08
+STRAGGLER_FACTOR = 5.0
+# true-speed drift by machine class (nodes slower/faster than benchmarked)
+# so the run exercises drift-triggered rescheduling, not just speculation
+DRIFT = {"C2": 2.5, "N2": 0.6}
+
+
+class _RecordingPlanner:
+    """Pass-through planner wrapper capturing the initial schedule."""
+
+    def __init__(self, planner):
+        self.planner = planner
+        self.initial = None
+
+    def initial_schedule(self):
+        s = self.planner.initial_schedule()
+        self.initial = {"assignment": dict(s.assignment),
+                        "order": {k: list(v) for k, v in s.order.items()}}
+        return s
+
+    def on_completion(self, rec, state):
+        return self.planner.on_completion(rec, state)
+
+    def decide_speculation(self, *a, **kw):
+        return self.planner.decide_speculation(*a, **kw)
+
+
+def run_scenario() -> dict:
+    """Deterministic end-to-end run -> pure-JSON record (events,
+    predictions, schedule)."""
+    gt = GroundTruth(WORKFLOW, seed=SEED)
+    traces, _ = local_profiling(WORKFLOW, gt, training_set=0)
+    dag = build_workflow(WORKFLOW, seed=SEED)
+    lot = LotaruPredictor(
+        "G", local_bench=simulate_microbench(LOCAL, 1)).fit(traces)
+    benches = {n.name: simulate_microbench(n, 1) for n in TARGET_MACHINES}
+    rng = np.random.default_rng(SEED)
+    nodes = random_cluster(rng, list(TARGET_MACHINES), n_nodes=N_NODES)
+    stragglers = {u for u in sorted(dag.tasks)
+                  if rng.random() < STRAGGLER_FRAC}
+
+    def true_rt(uid, node):
+        t = dag.tasks[uid]
+        base = node.name.rsplit("-", 1)[0]
+        return gt.runtime(t.task_name, t.input_gb, node, uid) \
+            * DRIFT.get(base, 1.0)
+
+    online = OnlinePredictor(lot, benches=benches)
+    planner = _RecordingPlanner(OnlineReschedulingPlanner(
+        dag, nodes, online, benches=benches))
+    res = execute_adaptive(
+        dag, nodes, planner, true_rt,
+        straggler_factor=lambda u: STRAGGLER_FACTOR if u in stragglers
+        else 1.0,
+        speculation=SpeculationPolicy(q=0.95, check_interval_s=15.0))
+
+    # post-run prediction sweep: the numbers the service would hand a
+    # scheduler after this execution (posteriors + node corrections)
+    probe_nodes = [None] + [n.name for n in nodes[:4]]
+    queries = [PredictionQuery(dag.tasks[u].task_name, nn,
+                               dag.tasks[u].input_gb)
+               for u in sorted(dag.tasks)[:16] for nn in probe_nodes]
+    preds = planner.planner.service.predict_batch(queries)
+    return {
+        "workflow": WORKFLOW,
+        "seed": SEED,
+        "n_nodes": N_NODES,
+        "stragglers": sorted(stragglers),
+        "initial_schedule": planner.initial,
+        "events": [[r.uid, r.node, float(r.start), float(r.finish),
+                    int(r.attempt)] for r in res.records],
+        "makespan": float(res.makespan),
+        "n_reschedules": int(res.n_reschedules),
+        "n_backups": int(res.n_backups),
+        "backup_waste_s": float(res.backup_waste_s),
+        "predictions": [[q.task, q.node, float(q.input_gb),
+                         [float(v) for v in row]]
+                        for q, row in zip(queries, preds)],
+    }
+
+
+def test_golden_replay_is_bit_identical():
+    assert os.path.exists(FIXTURE), (
+        f"missing fixture {FIXTURE}; regenerate with "
+        f"PYTHONPATH=src:. python tests/test_replay_golden.py --regen")
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    got = json.loads(json.dumps(run_scenario()))    # normalize tuples etc.
+    # readable failures first: structure, then the exact float payloads
+    assert got["events"] == want["events"]
+    assert got["initial_schedule"] == want["initial_schedule"]
+    assert got["predictions"] == want["predictions"]
+    assert got == want
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        sys.exit("pass --regen to overwrite the golden fixture")
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(run_scenario(), f, indent=1)
+    print(f"wrote {FIXTURE}")
