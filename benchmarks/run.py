@@ -21,7 +21,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
-    from benchmarks import (carbon, cost, online_adaptation, prediction_error,
+    from benchmarks import (carbon, cost, distributed_serving,
+                            online_adaptation, prediction_error,
                             profiling_time, refresh_overhead, replan_latency,
                             roofline_report, scheduling_makespan,
                             service_throughput, straggler_mitigation)
@@ -38,6 +39,10 @@ def main(argv=None):
         "replan_latency": lambda: replan_latency.run(),
         "refresh_overhead": lambda: refresh_overhead.run(),
         "roofline": lambda: roofline_report.run(),
+        "distributed_serving": lambda: distributed_serving.run()
+        if args.full else distributed_serving.run(
+            n_shards=2, n_client_procs=2, duration_s=4.0,
+            queries_per_tenant=256, n_callers=4, repeats=3),
     }
     full_only = {"straggler_mitigation"}
     only = set(args.only.split(",")) if args.only else None

@@ -54,10 +54,26 @@ class RefreshPolicy:
         contradicts the lift-time noise level before the periodic counter
         fires.
     min_points: never refit on fewer total (fit + streamed) points.
+
+    The last two are multi-tenant fairness budgets, enforced by
+    `FleetRefresher.due()` (so every entry point — refresh, maybe_refresh,
+    the daemon loop — sees the same throttled view):
+
+    max_tasks_per_tenant_per_cycle: cap on how many of one tenant's due
+        tasks enter a single refresh pass.  A noisy tenant streaming
+        completions into hundreds of tasks fills its quota and the rest
+        stay due for the next cycle — they are deferred, never dropped —
+        while other tenants' tasks still make the dispatch.
+    min_interval_s: per-task refresh rate limit — a task refreshed less
+        than this many seconds ago is not due yet, no matter how many
+        completions landed (protects the fit dispatch from a tenant whose
+        every_n fires continuously).
     """
     every_n: int = 32
     drift_ratio: Optional[float] = None
     min_points: int = 4
+    max_tasks_per_tenant_per_cycle: Optional[int] = None
+    min_interval_s: Optional[float] = None
 
 
 @dataclass
@@ -88,20 +104,39 @@ class FleetRefresher:
         self.reports: List[RefreshReport] = []
         self.failure_count = 0           # background passes that raised
         self.last_error: Optional[BaseException] = None   # most recent one
-        self._stop = threading.Event()
+        self._last_refresh: Dict[Tuple[int, str], float] = {}   # applied-at
+        self._stop = threading.Event()                          # monotonic
         self._thread: Optional[threading.Thread] = None
 
     # ---- due detection ------------------------------------------------------
     def due(self) -> List[Tuple[TenantBinding, str]]:
         """(binding, task) pairs due under the policy, across all tenants.
         Predictors without the refresh protocol (plain LotaruPredictor) are
-        skipped — their posteriors are not streaming."""
+        skipped — their posteriors are not streaming.
+
+        The policy's fairness budgets apply here: tasks refreshed within
+        `min_interval_s` are not yet due, and each tenant contributes at
+        most `max_tasks_per_tenant_per_cycle` tasks per sweep (the rest
+        remain due and surface on later sweeps — deferred, not dropped)."""
         out = []
+        pol = self.policy
+        now = time.monotonic()
+        per_tenant: Dict[str, int] = {}
         for b in self.store.bindings():
             fn = getattr(b.predictor, "refresh_due", None)
             if fn is None:
                 continue
-            out.extend((b, t) for t in fn(self.policy))
+            for t in fn(pol):
+                if pol.min_interval_s is not None:
+                    last = self._last_refresh.get((id(b.predictor), t))
+                    if last is not None and now - last < pol.min_interval_s:
+                        continue
+                if pol.max_tasks_per_tenant_per_cycle is not None:
+                    n = per_tenant.get(b.tenant, 0)
+                    if n >= pol.max_tasks_per_tenant_per_cycle:
+                        continue
+                    per_tenant[b.tenant] = n + 1
+                out.append((b, t))
         return out
 
     # ---- the batched refresh pass -------------------------------------------
@@ -154,7 +189,8 @@ class FleetRefresher:
             row_post = {leaf: v[i] for leaf, v in post.items()}
             if r["p"].apply_refresh(r["task"], row_post, seq=r["seq"]):
                 applied.append(r)
-            else:
+                self._last_refresh[k] = time.monotonic()   # min_interval_s
+            else:                                          # rate-limit stamp
                 n_stale += 1
 
         # publish: one put_many -> one COW generation across all tenants,

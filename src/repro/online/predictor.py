@@ -215,8 +215,18 @@ class OnlinePredictor:
         return resolve_bench(self.benches, node)
 
     def observe(self, comp: TaskCompletion) -> None:
-        """Fold one completed task into the posteriors (exact updates)."""
+        """Fold one completed task into the posteriors (exact updates).
+
+        When `observe_log` is set (the serving shard's oplog hook) it is
+        called with `comp` under the state lock BEFORE the update is
+        applied — write-ahead order: a completion is durable in the log
+        before it can mutate state, so replay-after-crash can never miss
+        an applied observation, only re-apply a logged one that did not
+        land (and replay from the checkpoint watermark is idempotent)."""
         with self._state_lock:
+            hook = getattr(self, "observe_log", None)
+            if hook is not None:
+                hook(comp)
             self._observe(comp)
 
     def _observe(self, comp: TaskCompletion) -> None:

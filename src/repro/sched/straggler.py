@@ -91,6 +91,28 @@ def normal_quantile(mean, std, q: float = 0.95):
 
 
 @dataclass
+class SpeculationPolicy:
+    """Knobs for uncertainty-driven speculative re-execution
+    (`workflow.simulator.execute_adaptive`): declare a running task a
+    straggler once its elapsed time exceeds the posterior q-quantile on
+    its node, and duplicate it on the best idle node (one backup per
+    task, first finisher wins).
+
+    The budget caps bound duplicate work cluster-wide (`None` = uncapped):
+
+    max_concurrent_backups: at most this many backups in flight at once —
+        further stragglers wait for a slot at the next progress-check
+        heartbeat instead of flooding idle nodes with copies.
+    max_total_backups: hard budget over the whole execution; once spent,
+        stragglers run to completion unduplicated.
+    """
+    q: float = 0.95
+    check_interval_s: float = 30.0
+    max_concurrent_backups: Optional[int] = None
+    max_total_backups: Optional[int] = None
+
+
+@dataclass
 class SpeculationDecision:
     threshold_s: float
     speculate: bool

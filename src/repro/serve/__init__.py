@@ -1,0 +1,27 @@
+"""Distributed serving plane: sharded PosteriorStore RPC tier.
+
+  placement — consistent-hash tenant->shard placement, versioned ShardMap
+  wire      — length-prefixed msgpack framing (sockets, oplog, snapshots)
+  shard     — the shard server process (store slice + frontend + refresher)
+  client    — fan-out ServingClient (routing, coalescing, retries,
+              backpressure propagation)
+  replica   — COW-snapshot shipping to read replicas
+  failover  — OpLog write-ahead durability + ShardSupervisor warm failover
+"""
+from repro.serve.client import (RemoteError, RetryPolicy, ServingClient,
+                                TransportError, WrongShardError)
+from repro.serve.failover import OpLog, ShardSpec, ShardSupervisor
+from repro.serve.placement import ShardInfo, ShardMap, stable_hash
+from repro.serve.replica import ReplicaServer, ReplicaShipper
+from repro.serve.shard import (RpcError, ShardMeta, ShardServer, boot_shard,
+                               state_digest)
+from repro.serve.wire import (MAX_FRAME, FrameTooLarge, TruncatedFrame,
+                              WireError)
+
+__all__ = [
+    "MAX_FRAME", "FrameTooLarge", "OpLog", "RemoteError", "ReplicaServer",
+    "ReplicaShipper", "RetryPolicy", "RpcError", "ServingClient",
+    "ShardInfo", "ShardMap", "ShardMeta", "ShardServer", "ShardSpec",
+    "ShardSupervisor", "TransportError", "TruncatedFrame", "WireError",
+    "WrongShardError", "boot_shard", "stable_hash", "state_digest",
+]

@@ -1,0 +1,184 @@
+"""Durability and warm failover for serving shards.
+
+Two pieces:
+
+  * `OpLog` — a per-shard append-only observation log using the wire
+    framing.  `OnlinePredictor.observe` calls the shard's hook under its
+    state lock BEFORE applying the update (write-ahead order), so every
+    *applied* observation is on disk and every *acknowledged* one was
+    both logged and applied.  The store checkpoint carries the oplog
+    watermark (`shard.ShardMeta` rides inside the manifest), so recovery
+    is: restore the checkpoint, replay log records past the watermark,
+    and the posterior state is bit-identical to the pre-crash primary —
+    with zero lost acknowledged observations.
+
+  * `ShardSupervisor` — spawns shard processes (`python -m
+    repro.serve.shard`), waits for their READY line, SIGKILLs them on
+    demand, and restarts a killed shard from the same checkpoint/oplog
+    spec (`failover`).  The restarted shard comes back on a fresh port;
+    readmission is `ShardMap.with_address`, which moves no namespaces.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional
+
+from repro.serve.wire import append_frame, iter_frames
+
+
+class OpLog:
+    """Append-only, sequence-numbered record log (one frame per record).
+
+    Records are dicts; `append` stamps them with a monotonically
+    increasing `"q"` (the ack sequence) and flushes before returning —
+    a record is durable against *process* death the moment append
+    returns (fsync against machine death is deliberately skipped; see
+    `wire.append_frame`).  Opening an existing log scans it to recover
+    the sequence, tolerating a torn tail from a crash mid-append."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.last_seq = 0
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                for _, rec in iter_frames(f):
+                    self.last_seq = max(self.last_seq, int(rec.get("q", 0)))
+        self._f = open(path, "ab")
+        self._lock = threading.Lock()
+
+    def append(self, record: dict) -> int:
+        with self._lock:
+            self.last_seq += 1
+            append_frame(self._f, {"q": self.last_seq, **record})
+            return self.last_seq
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.close()
+
+    @staticmethod
+    def replay(path: str, after_seq: int = 0) -> Iterator[dict]:
+        """Records with seq > after_seq, in order (the recovery tail:
+        `after_seq` is the checkpoint's embedded watermark)."""
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            for _, rec in iter_frames(f):
+                if int(rec.get("q", 0)) > after_seq:
+                    yield rec
+
+
+@dataclass
+class ShardSpec:
+    """Everything needed to (re)start one shard process."""
+    shard_id: str
+    bootstrap: str                    # "module:function" building namespaces
+    checkpoint_dir: str
+    oplog_path: str
+    host: str = "127.0.0.1"
+    port: int = 0                     # 0: kernel-assigned, read from READY
+    checkpoint_interval_s: Optional[float] = None
+    refresh_interval_s: Optional[float] = None
+    extra_args: List[str] = field(default_factory=list)
+
+
+class ShardSupervisor:
+    """Process lifecycle for a fleet of shards (benchmark/CI harness: a
+    production deployment would hand this role to systemd/k8s — the
+    protocol is the same: start, wait for READY, kill, restart from the
+    same durable spec)."""
+
+    def __init__(self, repo_root: Optional[str] = None,
+                 ready_timeout_s: float = 60.0):
+        self.repo_root = repo_root or os.getcwd()
+        self.ready_timeout_s = ready_timeout_s
+        self.procs: Dict[str, subprocess.Popen] = {}
+        self.specs: Dict[str, ShardSpec] = {}
+        self.ports: Dict[str, int] = {}
+
+    def _env(self) -> dict:
+        env = dict(os.environ)
+        src = os.path.join(self.repo_root, "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        return env
+
+    def start(self, spec: ShardSpec, map_json: str) -> int:
+        """Spawn the shard, block until its READY line, return its port."""
+        cmd = [sys.executable, "-m", "repro.serve.shard",
+               "--shard-id", spec.shard_id,
+               "--host", spec.host, "--port", str(spec.port),
+               "--map", map_json,
+               "--bootstrap", spec.bootstrap,
+               "--oplog", spec.oplog_path,
+               "--checkpoint", spec.checkpoint_dir]
+        if spec.checkpoint_interval_s is not None:
+            cmd += ["--checkpoint-interval", str(spec.checkpoint_interval_s)]
+        if spec.refresh_interval_s is not None:
+            cmd += ["--refresh-interval", str(spec.refresh_interval_s)]
+        cmd += spec.extra_args
+        proc = subprocess.Popen(cmd, cwd=self.repo_root, env=self._env(),
+                                stdout=subprocess.PIPE,
+                                stderr=subprocess.DEVNULL, text=True)
+        port = self._await_ready(proc, spec.shard_id)
+        self.procs[spec.shard_id] = proc
+        self.specs[spec.shard_id] = spec
+        self.ports[spec.shard_id] = port
+        return port
+
+    def _await_ready(self, proc: subprocess.Popen, shard_id: str) -> int:
+        deadline = time.monotonic() + self.ready_timeout_s
+        assert proc.stdout is not None
+        while True:
+            if time.monotonic() > deadline:
+                proc.kill()
+                raise TimeoutError(f"shard {shard_id!r} never became ready")
+            line = proc.stdout.readline()
+            if not line:
+                raise RuntimeError(
+                    f"shard {shard_id!r} exited before READY "
+                    f"(rc={proc.poll()})")
+            if line.startswith("SHARD-READY"):
+                for tok in line.split():
+                    if tok.startswith("port="):
+                        return int(tok.split("=", 1)[1])
+                raise RuntimeError(f"malformed READY line: {line!r}")
+
+    def kill(self, shard_id: str, sig: int = signal.SIGKILL) -> None:
+        """Hard-kill a shard (the failover drill: no flush, no goodbye)."""
+        proc = self.procs[shard_id]
+        proc.send_signal(sig)
+        proc.wait(timeout=30)
+
+    def failover(self, shard_id: str, map_json: str) -> int:
+        """Restart a dead shard from its durable spec: restore checkpoint,
+        replay oplog tail, reopen on a fresh port.  Returns the new port;
+        the caller readmits it with `ShardMap.with_address`."""
+        spec = self.specs[shard_id]
+        proc = self.procs.get(shard_id)
+        if proc is not None and proc.poll() is None:
+            raise RuntimeError(f"shard {shard_id!r} is still alive")
+        return self.start(spec, map_json)
+
+    def stop_all(self) -> None:
+        for sid, proc in list(self.procs.items()):
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGKILL)
+            try:
+                proc.wait(timeout=30)
+            finally:
+                if proc.stdout is not None:
+                    proc.stdout.close()
+        self.procs.clear()
+
+    def __enter__(self) -> "ShardSupervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop_all()

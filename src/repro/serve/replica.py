@@ -1,0 +1,207 @@
+"""Read replicas: periodic COW-snapshot shipping off the primary.
+
+The primary's blocks are copy-on-write and generation-stamped, so a
+replica feed is cheap and incremental by construction:
+`PosteriorStore.export_blocks(since_generation=g)` returns exactly the
+blocks that moved since the last ship (plus the row index and the
+predictors' streaming states), and `import_blocks` installs them into a
+*passive* store — no bindings, no syncs, so the replica can never
+diverge by writing.
+
+`ReplicaShipper` runs on the primary's event loop and pushes deltas to
+each replica on an interval, tracking a per-replica generation cursor
+(a replica that missed ships just gets a bigger delta next time; a new
+replica gets the full set, cursor -1).
+
+`ReplicaServer` answers:
+
+  install_snapshot  install a shipped delta
+  predict_base      (Q, 3) mean/lower/upper from the replicated rows —
+                    base (local-node) predictions: node extrapolation
+                    factors are primary-side predictor logic, and the
+                    replica deliberately holds state, not models
+  digest            sha256 of a shipped namespace's streaming state —
+                    comparing against the primary's `digest` proves the
+                    replica is bit-identical through the wire
+  health / observe  observe answers `read_only`: writes go to the
+                    primary, always
+
+A warm replica plus the primary's checkpoint+oplog are complementary:
+failover restores authoritative state from disk (failover.py); replicas
+scale reads and give the fleet a place to point dashboards mid-failover.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.wire import read_frame, write_frame
+from repro.store.compute import predict_stacked
+from repro.store.posterior import PosteriorStore
+
+
+class ReplicaServer:
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 impl: str = "auto", z: float = 1.96):
+        self.host, self.port = host, port
+        self.impl, self.z = impl, z
+        self.store: Optional[PosteriorStore] = None
+        self.installs = 0
+        self._server = None
+
+    # ---- ops ----------------------------------------------------------------
+    def _install(self, payload) -> dict:
+        if self.store is None:
+            self.store = PosteriorStore(
+                block_size=int(payload["block_size"]))
+        n = self.store.import_blocks(payload)
+        self.installs += 1
+        return {"installed": n, "generation": self.store.generation}
+
+    def _predict_base(self, keys: Sequence[str], x: Sequence[float]) -> dict:
+        if self.store is None:
+            raise RuntimeError("replica has no snapshot yet")
+        snap = self.store.snapshot()
+        post = snap.gather(list(keys))
+        mean, std = predict_stacked(np.asarray(x, np.float64), post,
+                                    impl=self.impl)
+        out = np.stack([mean, mean - self.z * std, mean + self.z * std],
+                       axis=1).astype(np.float32)
+        return {"p": out}
+
+    def _digest(self, namespace: str) -> dict:
+        states = self.store._saved_states if self.store is not None else {}
+        state = states.get(namespace)
+        if state is None:
+            raise KeyError(f"namespace {namespace!r} not replicated")
+        blob = json.dumps(state, sort_keys=True, separators=(",", ":"))
+        return {"sha256": hashlib.sha256(blob.encode()).hexdigest()}
+
+    async def _serve_one(self, req, writer) -> None:
+        rid = req.get("i")
+        try:
+            op = req.get("op")
+            if op == "install_snapshot":
+                r = self._install(req["s"])
+            elif op == "predict_base":
+                r = self._predict_base(req["keys"], req["x"])
+            elif op == "digest":
+                r = self._digest(req["ns"])
+            elif op == "health":
+                r = {"role": "replica", "pid": os.getpid(),
+                     "installs": self.installs,
+                     "generation": (self.store.generation
+                                    if self.store is not None else -1)}
+            elif op == "observe":
+                resp = {"i": rid, "ok": False,
+                        "e": {"k": "read_only",
+                              "m": "replicas never accept writes; "
+                                   "observe on the primary"}}
+                await write_frame(writer, resp)
+                return
+            else:
+                raise ValueError(f"replica does not speak {op!r}")
+            resp = {"i": rid, "ok": True, "r": r}
+        except Exception as e:       # noqa: BLE001
+            resp = {"i": rid, "ok": False,
+                    "e": {"k": type(e).__name__, "m": str(e)}}
+        try:
+            await write_frame(writer, resp)
+        except (ConnectionError, RuntimeError):
+            pass
+
+    async def _on_conn(self, reader, writer) -> None:
+        try:
+            while True:
+                req = await read_frame(reader)
+                if req is None:
+                    break
+                await self._serve_one(req, writer)
+        except Exception:            # noqa: BLE001 — torn peer frame
+            pass
+        finally:
+            writer.close()
+
+    # ---- lifecycle ----------------------------------------------------------
+    async def start(self) -> "ReplicaServer":
+        self._server = await asyncio.start_server(self._on_conn, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+
+class ReplicaShipper:
+    """Primary-side periodic snapshot shipping to N replicas."""
+
+    def __init__(self, store: PosteriorStore,
+                 replicas: Sequence[Tuple[str, int]],
+                 interval_s: float = 1.0):
+        self.store = store
+        self.replicas = list(replicas)
+        self.interval_s = interval_s
+        self.shipped: Dict[Tuple[str, int], int] = {
+            addr: -1 for addr in self.replicas}    # generation cursor
+        self.ship_count = 0
+        self._task: Optional[asyncio.Task] = None
+        self._stop = asyncio.Event()
+
+    async def ship_once(self) -> List[int]:
+        """One delta per replica (coalesced export per distinct cursor).
+        Returns installed-block counts; a dead replica keeps its cursor
+        and catches up on the next round."""
+        out = []
+        exports: Dict[int, dict] = {}
+        for addr in self.replicas:
+            since = self.shipped[addr]
+            if since not in exports:
+                exports[since] = self.store.export_blocks(
+                    since_generation=since)
+            payload = exports[since]
+            try:
+                reader, writer = await asyncio.open_connection(*addr)
+                try:
+                    await write_frame(writer, {"i": 1,
+                                               "op": "install_snapshot",
+                                               "s": payload})
+                    resp = await read_frame(reader)
+                finally:
+                    writer.close()
+            except (ConnectionError, OSError):
+                out.append(-1)
+                continue
+            if resp and resp.get("ok"):
+                self.shipped[addr] = int(payload["generation"])
+                self.ship_count += 1
+                out.append(int(resp["r"]["installed"]))
+            else:
+                out.append(-1)
+        return out
+
+    async def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                await asyncio.wait_for(self._stop.wait(), self.interval_s)
+            except asyncio.TimeoutError:
+                try:
+                    await self.ship_once()
+                except Exception:    # noqa: BLE001 — shipping must not
+                    pass             # take down the primary's loop
+
+    def start(self) -> "ReplicaShipper":
+        self._task = asyncio.ensure_future(self._loop())
+        return self
+
+    async def stop(self) -> None:
+        self._stop.set()
+        if self._task is not None:
+            await self._task

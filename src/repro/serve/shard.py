@@ -1,0 +1,456 @@
+"""One serving shard: a store slice behind an RPC socket.
+
+A shard process owns every namespace the shard map places on its id —
+the `PosteriorStore` rows, the bound `OnlinePredictor`s, its own
+`AsyncPredictionFrontend` (batch-window coalescing) and optionally its
+own `FleetRefresher` (maintenance plane) — and serves them over the
+length-prefixed wire protocol:
+
+  predict         one namespace's query batch -> (Q, 3) array
+  predict_multi   several namespaces' batches in one frame (the client
+                  coalesces per shard)
+  predict_matrix  the decision plane's (T, N) row-gather primitive
+  observe         fold a completion in; the ack carries the oplog seq
+  refresh / checkpoint / digest / health / pull_blocks / update_map
+
+Ownership is enforced per request: a namespace the shard's own map does
+not place here answers `wrong_shard` carrying that map, so clients with
+a stale map self-correct (placement.ShardMap version protocol).
+
+Durability: observes are write-ahead logged (`failover.OpLog`) through
+the predictor's `observe_log` hook — logged under the predictor's state
+lock BEFORE the update applies, acknowledged after.  Checkpoints embed
+the applied-oplog watermark via `ShardMeta`, a sentinel pseudo-predictor
+bound at `__shard__/__meta__` whose exported state rides inside the
+store manifest — the watermark commits atomically with the posterior
+blocks it describes (no sidecar file, no torn-meta crash window).
+`boot_shard` is the recovery path: restore checkpoint, replay the oplog
+tail past the watermark, install hooks, then open the socket.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import hashlib
+import importlib
+import json
+import os
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.online.events import TaskCompletion
+from repro.online.maintenance import FleetRefresher, RefreshPolicy
+from repro.serve.failover import OpLog
+from repro.serve.placement import ShardMap
+from repro.serve.wire import WireError, read_frame, write_frame
+from repro.store.compute import predict_stacked, scale
+from repro.store.frontend import AsyncPredictionFrontend, QueueFullError
+from repro.store.keys import namespace_str
+from repro.store.posterior import MANIFEST_NAME, PosteriorStore
+
+META_TENANT, META_WORKFLOW = "__shard__", "__meta__"
+
+# type of a bootstrap function: (shard_id, shard_map) -> namespaces
+Bootstrap = Callable[[str, ShardMap], Mapping[Tuple[str, str], tuple]]
+
+
+class _Q:
+    """Lightweight prediction query (what the frontend reads: .task,
+    .node, .input_gb) decoded from a wire triple."""
+    __slots__ = ("task", "node", "input_gb")
+
+    def __init__(self, task: str, node: Optional[str], input_gb: float):
+        self.task, self.node, self.input_gb = task, node, input_gb
+
+
+class RpcError(Exception):
+    """Raised by op handlers; `payload` goes on the wire verbatim."""
+
+    def __init__(self, kind: str, msg: str, **extra):
+        super().__init__(msg)
+        self.payload = {"k": kind, "m": msg, **extra}
+
+
+class ShardMeta:
+    """Sentinel pseudo-predictor carrying the shard's oplog watermark
+    inside store checkpoints: `save()` exports it with every manifest,
+    `resume()` loads it back — the recovery code reads exactly the
+    watermark the restored blocks were written with."""
+
+    def __init__(self) -> None:
+        self.applied_seq = 0
+
+    def task_names(self) -> list:
+        return []                    # no posterior rows: sync is a no-op
+
+    def export_state(self) -> dict:
+        return {"applied_seq": int(self.applied_seq)}
+
+    def load_state(self, state: Mapping) -> None:
+        self.applied_seq = int(state.get("applied_seq", 0))
+
+
+def state_digest(predictor) -> str:
+    """sha256 over the canonical JSON of a predictor's exported streaming
+    state.  JSON float repr round-trips float64 exactly, so two
+    predictors digest equal iff their posteriors are bit-identical —
+    the failover acceptance check."""
+    state = predictor.export_state()
+    blob = json.dumps(state, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ShardServer:
+    def __init__(self, shard_id: str, shard_map: ShardMap, *,
+                 store: Optional[PosteriorStore] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 oplog: Optional[OpLog] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_interval_s: Optional[float] = None,
+                 window_s: float = 0.002,
+                 max_pending_batches: Optional[int] = 64,
+                 refresh_policy: Optional[RefreshPolicy] = None,
+                 refresh_interval_s: Optional[float] = None,
+                 impl: str = "auto", z: float = 1.96):
+        self.shard_id = shard_id
+        self.map = shard_map
+        self.host, self.port = host, port
+        self.store = store if store is not None else PosteriorStore()
+        self.oplog = oplog
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_interval_s = checkpoint_interval_s
+        self.impl, self.z = impl, z
+        self.applied_seq = oplog.last_seq if oplog is not None else 0
+        self.meta = ShardMeta()
+        self.refresher = (FleetRefresher(self.store, refresh_policy,
+                                         impl=impl)
+                          if refresh_interval_s is not None else None)
+        self.frontend = AsyncPredictionFrontend(
+            self.store, z=z, impl=impl, window_s=window_s,
+            max_pending_batches=max_pending_batches,
+            refresher=self.refresher,
+            refresh_interval_s=refresh_interval_s or 1.0)
+        self.replayed = 0            # oplog records replayed at boot
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._checkpoint_task: Optional[asyncio.Task] = None
+        self._closing = asyncio.Event()
+
+    # ---- namespace wiring ---------------------------------------------------
+    def owns(self, tenant: str, workflow: str) -> bool:
+        return self.map.shard_for(namespace_str(tenant, workflow)) \
+            == self.shard_id
+
+    def attach(self, tenant: str, workflow: str, predictor,
+               benches: Optional[Mapping] = None) -> None:
+        """resume + oplog hook: the order matters — recovery replays the
+        log tail BEFORE hooks exist, so replayed observes are applied but
+        never re-appended."""
+        self.store.resume(tenant, workflow, predictor, benches)
+        self.install_oplog_hook(tenant, workflow, predictor)
+
+    def install_oplog_hook(self, tenant: str, workflow: str,
+                           predictor) -> None:
+        if self.oplog is None or not hasattr(predictor, "observe"):
+            return
+
+        def hook(comp: TaskCompletion, _t=tenant, _w=workflow) -> None:
+            # runs under the predictor's state lock, before _observe:
+            # write-ahead order (see OnlinePredictor.observe)
+            self.applied_seq = self.oplog.append(
+                {"t": _t, "w": _w, "c": dataclasses.asdict(comp)})
+
+        predictor.observe_log = hook
+
+    # ---- checkpointing ------------------------------------------------------
+    def checkpoint(self) -> dict:
+        """Durable snapshot: capture the applied watermark into the meta
+        sentinel, then save.  Runs on the event-loop thread, so no observe
+        interleaves between capture and save — the watermark is exact."""
+        if self.checkpoint_dir is None:
+            raise RpcError("no_checkpoint", "shard has no checkpoint dir")
+        seq = self.applied_seq
+        self.meta.applied_seq = seq
+        incremental = os.path.exists(
+            os.path.join(self.checkpoint_dir, MANIFEST_NAME))
+        try:
+            self.store.save(self.checkpoint_dir, incremental=incremental,
+                            keep_last=2)
+        except ValueError:           # divergent lineage: full save re-owns it
+            self.store.save(self.checkpoint_dir, keep_last=2)
+        return {"seq": seq, "generation": self.store.generation}
+
+    async def _checkpoint_loop(self) -> None:
+        while not self._closing.is_set():
+            try:
+                await asyncio.wait_for(self._closing.wait(),
+                                       self.checkpoint_interval_s)
+            except asyncio.TimeoutError:
+                try:
+                    self.checkpoint()
+                except Exception:    # noqa: BLE001 — a failed periodic save
+                    pass             # must not kill serving; next tick retries
+
+    # ---- RPC dispatch -------------------------------------------------------
+    def _require_owner(self, tenant: str, workflow: str) -> None:
+        ns = namespace_str(tenant, workflow)
+        owner = self.map.shard_for(ns)
+        if owner != self.shard_id:
+            raise RpcError("wrong_shard",
+                           f"namespace {ns!r} belongs to shard {owner!r}",
+                           map=self.map.to_wire())
+
+    def _binding(self, tenant: str, workflow: str):
+        b = self.store.binding(tenant, workflow)
+        if b is None:
+            raise RpcError("unknown_namespace",
+                           f"{namespace_str(tenant, workflow)!r} is not "
+                           f"bound on shard {self.shard_id!r}")
+        return b
+
+    def _queries(self, triples) -> List[_Q]:
+        return [_Q(t, n, float(gb)) for t, n, gb in triples]
+
+    async def _op_predict(self, req) -> dict:
+        t, w = req["t"], req["w"]
+        self._require_owner(t, w)
+        try:
+            fut = self.frontend.predict_async(self._queries(req["x"]), t, w)
+        except QueueFullError as e:
+            raise RpcError("queue_full", str(e)) from e
+        return {"p": await asyncio.wrap_future(fut)}
+
+    async def _op_predict_multi(self, req) -> dict:
+        futs = []
+        for b in req["b"]:
+            t, w = b["t"], b["w"]
+            self._require_owner(t, w)
+            try:
+                futs.append(self.frontend.predict_async(
+                    self._queries(b["x"]), t, w))
+            except QueueFullError as e:
+                raise RpcError("queue_full", str(e)) from e
+        return {"p": list(await asyncio.gather(
+            *[asyncio.wrap_future(f) for f in futs]))}
+
+    async def _op_predict_matrix(self, req) -> dict:
+        t, w = req["t"], req["w"]
+        self._require_owner(t, w)
+        tasks = [(name, float(gb)) for name, gb in req["tasks"]]
+        nodes = list(req["nodes"])
+        if not tasks or not nodes:
+            shape = (len(tasks), len(nodes))
+            return {"mean": np.zeros(shape), "std": np.zeros(shape)}
+        binding = self._binding(t, w)
+        binding.sync()
+        snap = self.store.snapshot()
+        post = snap.gather([binding.key_str(name) for name, _ in tasks])
+        x = np.asarray([gb for _, gb in tasks])
+        mean, std = predict_stacked(x, post, impl=self.impl)
+        f = binding.factor_matrix([name for name, _ in tasks], nodes)
+        mean, std = scale(mean[:, None], std[:, None], f)
+        return {"mean": mean, "std": std}
+
+    async def _op_observe(self, req) -> dict:
+        t, w = req["t"], req["w"]
+        self._require_owner(t, w)
+        binding = self._binding(t, w)
+        comp = TaskCompletion(**req["c"])
+        binding.predictor.observe(comp)   # hook logs + applies atomically
+        return {"seq": self.applied_seq}
+
+    async def _op_refresh(self, req) -> dict:
+        refresher = self.refresher or FleetRefresher(self.store,
+                                                     impl=self.impl)
+        report = refresher.maybe_refresh()
+        return {"refreshed": 0 if report is None else report.n_tasks,
+                "generation": self.store.generation}
+
+    async def _op_checkpoint(self, req) -> dict:
+        return self.checkpoint()
+
+    async def _op_digest(self, req) -> dict:
+        binding = self._binding(req["t"], req["w"])
+        return {"sha256": state_digest(binding.predictor)}
+
+    async def _op_health(self, req) -> dict:
+        return {"shard_id": self.shard_id, "v": self.map.version,
+                "generation": self.store.generation,
+                "seq": self.applied_seq, "pid": os.getpid(),
+                "namespaces": [ns for ns in self.store.namespaces()
+                               if not ns.startswith(META_TENANT)]}
+
+    async def _op_pull_blocks(self, req) -> dict:
+        return {"s": self.store.export_blocks(
+            since_generation=int(req.get("since", -1)))}
+
+    async def _op_update_map(self, req) -> dict:
+        m = ShardMap.from_wire(req["map"])
+        if m.version > self.map.version:
+            self.map = m
+        return {"v": self.map.version}
+
+    async def _op_hello(self, req) -> dict:
+        return {"shard_id": self.shard_id, "map": self.map.to_wire()}
+
+    async def _op_shutdown(self, req) -> dict:
+        asyncio.get_running_loop().call_soon(self._closing.set)
+        return {"bye": True}
+
+    async def _dispatch(self, req) -> dict:
+        op = req.get("op")
+        fn = getattr(self, f"_op_{op}", None)
+        if fn is None:
+            raise RpcError("unknown_op", f"shard does not speak {op!r}")
+        return await fn(req)
+
+    async def _serve_one(self, req, writer: asyncio.StreamWriter) -> None:
+        rid = req.get("i") if isinstance(req, dict) else None
+        try:
+            resp = {"i": rid, "ok": True, "r": await self._dispatch(req)}
+        except RpcError as e:
+            resp = {"i": rid, "ok": False, "e": e.payload}
+        except Exception as e:       # noqa: BLE001 — a handler bug answers
+            resp = {"i": rid, "ok": False,          # the caller, it does
+                    "e": {"k": type(e).__name__,    # not kill the shard
+                          "m": str(e)}}
+        try:
+            await write_frame(writer, resp)
+        except (ConnectionError, RuntimeError):
+            pass                     # peer went away mid-response
+
+    async def _on_conn(self, reader: asyncio.StreamReader,
+                       writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                req = await read_frame(reader)
+                if req is None:
+                    break
+                # a task per request: a slow predict (window wait) must not
+                # head-of-line block pipelined requests on this connection;
+                # responses carry ids, ordering is the client's job
+                asyncio.ensure_future(self._serve_one(req, writer))
+        except WireError:
+            pass                     # torn client frame: drop the connection
+        finally:
+            writer.close()
+
+    # ---- lifecycle ----------------------------------------------------------
+    async def start(self) -> "ShardServer":
+        self._server = await asyncio.start_server(self._on_conn, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        if self.checkpoint_interval_s is not None \
+                and self.checkpoint_dir is not None:
+            self._checkpoint_task = asyncio.ensure_future(
+                self._checkpoint_loop())
+        return self
+
+    async def serve_until_closed(self) -> None:
+        await self._closing.wait()
+        await self.aclose()
+
+    async def aclose(self) -> None:
+        self._closing.set()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if self._checkpoint_task is not None:
+            self._checkpoint_task.cancel()
+        self.frontend.close()
+        if self.oplog is not None:
+            self.oplog.close()
+
+
+# ---- recovery boot path ------------------------------------------------------
+def boot_shard(shard_id: str, shard_map: ShardMap, bootstrap: Bootstrap,
+               *, checkpoint_dir: Optional[str] = None,
+               oplog_path: Optional[str] = None,
+               **server_opts) -> ShardServer:
+    """Build a ShardServer cold or warm.
+
+    Warm (checkpoint exists): restore the store, resume every owned
+    namespace (streaming states load bit-identically), read the oplog
+    watermark from the embedded ShardMeta, replay the log tail past it
+    — BEFORE oplog hooks exist, so replay never re-appends — then
+    install hooks and hand back a server ready to open its socket.
+    Cold: fresh store, bind the bootstrap namespaces, empty log."""
+    if checkpoint_dir is not None and os.path.exists(
+            os.path.join(checkpoint_dir, MANIFEST_NAME)):
+        store = PosteriorStore.restore(checkpoint_dir)
+    else:
+        store = PosteriorStore()
+    meta = ShardMeta()
+    store.resume(META_TENANT, META_WORKFLOW, meta)
+
+    namespaces = {
+        (t, w): spec for (t, w), spec in bootstrap(shard_id, shard_map)
+        .items()
+        if shard_map.shard_for(namespace_str(t, w)) == shard_id}
+    preds: Dict[Tuple[str, str], object] = {}
+    for (t, w), spec in namespaces.items():
+        predictor, benches = (spec if isinstance(spec, tuple)
+                              else (spec, None))
+        store.resume(t, w, predictor, benches)
+        preds[(t, w)] = predictor
+
+    replayed = 0
+    if oplog_path is not None:
+        for rec in OpLog.replay(oplog_path, after_seq=meta.applied_seq):
+            p = preds.get((rec["t"], rec["w"]))
+            if p is not None:
+                p.observe(TaskCompletion(**rec["c"]))
+            replayed += 1
+
+    oplog = OpLog(oplog_path) if oplog_path is not None else None
+    server = ShardServer(shard_id, shard_map, store=store, oplog=oplog,
+                         checkpoint_dir=checkpoint_dir, **server_opts)
+    server.meta = meta
+    server.applied_seq = oplog.last_seq if oplog is not None else 0
+    for (t, w), p in preds.items():
+        server.install_oplog_hook(t, w, p)
+    server.replayed = replayed
+    return server
+
+
+def load_bootstrap(ref: str) -> Bootstrap:
+    mod, _, fn = ref.partition(":")
+    if not fn:
+        raise ValueError(f"bootstrap must be 'module:function', got {ref!r}")
+    return getattr(importlib.import_module(mod), fn)
+
+
+async def _amain(args: argparse.Namespace) -> None:
+    shard_map = ShardMap.from_wire(json.loads(args.map))
+    server = boot_shard(
+        args.shard_id, shard_map, load_bootstrap(args.bootstrap),
+        checkpoint_dir=args.checkpoint, oplog_path=args.oplog,
+        host=args.host, port=args.port,
+        checkpoint_interval_s=args.checkpoint_interval,
+        refresh_interval_s=args.refresh_interval,
+        window_s=args.window_s, impl=args.impl)
+    await server.start()
+    print(f"SHARD-READY port={server.port} pid={os.getpid()} "
+          f"replayed={server.replayed}", flush=True)
+    await server.serve_until_closed()
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description="posterior serving shard")
+    ap.add_argument("--shard-id", required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--map", required=True, help="ShardMap.to_wire JSON")
+    ap.add_argument("--bootstrap", required=True, help="module:function")
+    ap.add_argument("--oplog", default=None)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-interval", type=float, default=None)
+    ap.add_argument("--refresh-interval", type=float, default=None)
+    ap.add_argument("--window-s", type=float, default=0.002)
+    ap.add_argument("--impl", default="auto")
+    asyncio.run(_amain(ap.parse_args(argv)))
+
+
+if __name__ == "__main__":
+    main()

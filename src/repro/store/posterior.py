@@ -35,6 +35,7 @@ from __future__ import annotations
 import heapq
 import json
 import os
+import re
 import threading
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -52,6 +53,86 @@ CHECKPOINT_FORMAT = 2
 
 def _block_file(i: int) -> str:
     return f"block_{i}.npz"
+
+
+def _hist_block_file(i: int, gen: int) -> str:
+    """Name a superseded block generation keeps under retention
+    (`save(keep_last=...)`): the content block i had at generation `gen`."""
+    return f"block_{i}.g{gen}.npz"
+
+
+def _hist_manifest_file(gen: int) -> str:
+    return f"manifest.g{gen}.json"
+
+
+_BLOCK_FILE_RE = re.compile(r"block_(\d+)(?:\.g(\d+))?\.npz$")
+_HIST_MANIFEST_RE = re.compile(r"manifest\.g(\d+)\.json$")
+
+
+def _preserve_history(path: str, prev: dict, rewritten, deleted) -> None:
+    """Hard-link the outgoing checkpoint generation under suffixed names
+    before `save(keep_last=...)` overwrites or deletes it, so it stays
+    restorable (`restore(path, generation=...)`) until retention prunes
+    it.  Linking is additive — a crash mid-preserve leaves the live
+    checkpoint untouched, it just keeps one extra generation."""
+    prev_block_gen = {int(k): int(v)
+                      for k, v in (prev.get("block_gen") or {}).items()}
+    gen = int(prev.get("generation", 0))
+    hist_manifest = os.path.join(path, _hist_manifest_file(gen))
+    if not os.path.exists(hist_manifest):
+        try:
+            os.link(os.path.join(path, MANIFEST_NAME), hist_manifest)
+        except FileNotFoundError:
+            return                   # no previous checkpoint: nothing to keep
+    for i in sorted(set(rewritten) | set(deleted)):
+        g = prev_block_gen.get(i)
+        if g is None:                # legacy format-1 history lives in the
+            continue                 # blocks.npz blob, which save never touches
+        hist = os.path.join(path, _hist_block_file(i, g))
+        if os.path.exists(hist):
+            continue
+        try:
+            os.link(os.path.join(path, _block_file(i)), hist)
+        except FileNotFoundError:    # block file already missing: the live
+            pass                     # checkpoint self-repairs, so can history
+
+
+def _gc_checkpoint(path: str, keep_last: int, manifest: dict) -> None:
+    """Prune checkpoint history beyond the newest `keep_last - 1`
+    superseded generations (the live checkpoint is the Nth), plus any
+    block npz / stale temp no surviving manifest references — orphans of
+    a different store saved at the same path or of a crashed save."""
+    files = set(os.listdir(path))
+    hist = sorted(((int(m.group(1)), f) for f in files
+                   if (m := _HIST_MANIFEST_RE.fullmatch(f)) is not None),
+                  reverse=True)
+    kept = hist[:keep_last - 1]
+    referenced = {MANIFEST_NAME, BLOCKS_NAME}
+    referenced.update(_block_file(int(i))
+                      for i in (manifest.get("block_gen") or {}))
+    for _, fname in kept:
+        referenced.add(fname)
+        try:
+            with open(os.path.join(path, fname)) as f:
+                hm = json.load(f)
+        except (OSError, ValueError):
+            continue                 # unreadable history: keep, never guess
+        for bid, g in (hm.get("block_gen") or {}).items():
+            suffixed = _hist_block_file(int(bid), int(g))
+            # a block unchanged since that generation has no suffixed
+            # copy — the live file still holds those exact bytes
+            referenced.add(suffixed if suffixed in files
+                           else _block_file(int(bid)))
+    for fname in files:
+        if fname in referenced:
+            continue
+        if (_BLOCK_FILE_RE.fullmatch(fname) is not None
+                or _HIST_MANIFEST_RE.fullmatch(fname) is not None
+                or fname.endswith(".tmp")):
+            try:
+                os.remove(os.path.join(path, fname))
+            except FileNotFoundError:
+                pass
 
 # scale-like leaves default to 1 in unassigned slots so a stray read can
 # never divide by zero (assigned-row reads are guarded by the snapshot)
@@ -480,7 +561,8 @@ class PosteriorStore:
         return self.snapshot().gather(keys)
 
     # ---- checkpoint / restore -----------------------------------------------
-    def save(self, path: str, incremental: bool = False) -> str:
+    def save(self, path: str, incremental: bool = False,
+             keep_last: Optional[int] = None) -> str:
         """Write per-block npz files + a manifest (JSON): key index,
         generation, per-block generations, and each bound predictor's
         streaming state via `export_state()` (NIG posteriors,
@@ -494,7 +576,21 @@ class PosteriorStore:
         the whole stack) and files of blocks released by evict() are
         removed.  The manifest is always rewritten, so the directory is a
         complete, self-contained checkpoint after every save.  The block
-        ids actually written land in `last_checkpoint_blocks`."""
+        ids actually written land in `last_checkpoint_blocks`.
+
+        `keep_last=N` is the retention/GC mode for long-lived checkpoint
+        directories (a serving shard saving on a timer).  Before a block
+        file is overwritten or an evicted block's file dropped, its
+        previous content is preserved (hard-linked, so it costs an inode,
+        not a copy) as `block_i.g<gen>.npz`, and the outgoing manifest as
+        `manifest.g<gen>.json` — each save leaves the last N checkpoint
+        generations restorable (`restore(path, generation=...)`).
+        Everything older is pruned, as are orphaned npz files no manifest
+        references (leftovers of a different store saved at the same path,
+        or staging temps from a crashed save).  `keep_last=1` keeps only
+        the live checkpoint."""
+        if keep_last is not None and keep_last < 1:
+            raise ValueError("keep_last must be >= 1")
         os.makedirs(path, exist_ok=True)
         with self._lock:
             bindings = list(self._bindings.values())
@@ -503,15 +599,18 @@ class PosteriorStore:
                            # an observe() with no predict since must not
                            # checkpoint new state over a pre-observe row
         with self._lock:
+            prev: Optional[dict] = None
             prev_gen: Optional[Dict[int, int]] = None
+            mpath = os.path.join(path, MANIFEST_NAME)
+            if (incremental or keep_last is not None) \
+                    and os.path.exists(mpath):
+                with open(mpath) as f:
+                    prev = json.load(f)
             if incremental:
-                mpath = os.path.join(path, MANIFEST_NAME)
-                if not os.path.exists(mpath):
+                if prev is None:
                     raise FileNotFoundError(
                         f"incremental save needs an existing checkpoint at "
                         f"{path!r}; do a full save first")
-                with open(mpath) as f:
-                    prev = json.load(f)
                 if (prev.get("format") != CHECKPOINT_FORMAT
                         or prev.get("block_size") != self.block_size):
                     raise ValueError(
@@ -566,6 +665,8 @@ class PosteriorStore:
         # THEN delete evicted blocks' files.  A crash at any point leaves a
         # manifest (old or new) whose referenced block files all exist and
         # are complete — never a truncated npz or a dangling row index.
+        if keep_last is not None and prev is not None:
+            _preserve_history(path, prev, [i for i, _ in to_write], to_delete)
         for i, arrs in to_write:
             tmp = os.path.join(path, _block_file(i) + ".tmp")
             with open(tmp, "wb") as f:       # file handle: np.savez must not
@@ -580,14 +681,24 @@ class PosteriorStore:
                 os.remove(os.path.join(path, _block_file(i)))
             except FileNotFoundError:
                 pass
+        if keep_last is not None:
+            _gc_checkpoint(path, keep_last, manifest)
         with self._lock:
             self._last_save_id = save_id
         self.last_checkpoint_blocks = [i for i, _ in to_write]
         return path
 
     @classmethod
-    def restore(cls, path: str) -> "PosteriorStore":
-        with open(os.path.join(path, MANIFEST_NAME)) as f:
+    def restore(cls, path: str,
+                generation: Optional[int] = None) -> "PosteriorStore":
+        """Rebuild a store from the checkpoint at `path`.  By default the
+        live checkpoint; `generation=g` selects a superseded one retained
+        by `save(keep_last=...)` (its manifest is `manifest.g<g>.json`,
+        its blocks resolve to suffixed history files where the live ones
+        have since moved on)."""
+        mname = (MANIFEST_NAME if generation is None
+                 else _hist_manifest_file(int(generation)))
+        with open(os.path.join(path, mname)) as f:
             manifest = json.load(f)
         fmt = manifest.get("format")
         if fmt not in (1, CHECKPOINT_FORMAT):
@@ -613,9 +724,16 @@ class PosteriorStore:
                             else _new_block(store.block_size)[leaf])
                      for leaf in LEAVES} for i in range(n_blocks)]
         else:
+            block_gen = {int(k): int(v)
+                         for k, v in manifest.get("block_gen", {}).items()}
             store._blocks = []
             for i in range(n_blocks):
                 fpath = os.path.join(path, _block_file(i))
+                if generation is not None and i in block_gen:
+                    hist = os.path.join(path,
+                                        _hist_block_file(i, block_gen[i]))
+                    if os.path.exists(hist):
+                        fpath = hist
                 if os.path.exists(fpath):
                     with np.load(fpath) as z:
                         store._blocks.append(
@@ -652,6 +770,94 @@ class PosteriorStore:
         # blocks when the checkpoint was consistent, and self-repairing
         # when it was not — e.g. a manifest written by an external tool)
         return self.bind(tenant, workflow, predictor, benches, sync=False)
+
+    # ---- replica shipping ---------------------------------------------------
+    def export_blocks(self, since_generation: int = -1) -> dict:
+        """Serializable snapshot delta for read-replica shipping: every
+        block whose generation moved past `since_generation`, plus the
+        full row index, per-block generations, released block ids, and
+        the bound predictors' streaming states.  Blocks are COW-immutable
+        once published, so the returned arrays are safe references —
+        the wire layer (or `import_blocks`) copies.  `-1` ships
+        everything (bootstrap)."""
+        with self._lock:
+            bindings = list(self._bindings.values())
+        for b in bindings:
+            b.sync()                     # ship what a checkpoint would ship
+        with self._lock:
+            blocks: Dict[str, Dict[str, np.ndarray]] = {}
+            released: List[int] = []
+            for i, blk in enumerate(self._blocks):
+                if blk is None:
+                    released.append(i)
+                    continue
+                g = self._block_gen.setdefault(i, self.generation)
+                if g > since_generation:
+                    blocks[str(i)] = {leaf: blk[leaf] for leaf in LEAVES}
+            states = dict(self._saved_states)
+            for b in self._bindings.values():
+                exp = getattr(b.predictor, "export_state", None)
+                states[b.namespace] = exp() if exp is not None else None
+            return {"block_size": self.block_size,
+                    "generation": self.generation,
+                    "n_blocks": len(self._blocks),
+                    "released": released,
+                    "block_gen": {str(i): int(g)
+                                  for i, g in self._block_gen.items()},
+                    "rows": dict(self._rows),
+                    "blocks": blocks,
+                    "namespaces": states}
+
+    def import_blocks(self, payload: Mapping) -> int:
+        """Install an `export_blocks` payload into a *passive* replica
+        store (refused when live bindings exist — a binding's sync would
+        race the install and row indices could diverge).  The row index
+        is replaced wholesale and arrays are copied, so the replica never
+        aliases the primary in-process.  Returns the number of blocks
+        installed."""
+        with self._lock:
+            if self._bindings:
+                raise RuntimeError(
+                    "import_blocks targets passive replica stores; this "
+                    "store has live bindings — evict them first")
+            if int(payload["block_size"]) != self.block_size:
+                raise ValueError(
+                    f"block_size mismatch: snapshot has "
+                    f"{payload['block_size']}, store has {self.block_size}")
+            gen = int(payload["generation"])
+            if gen < self.generation:
+                raise ValueError(
+                    f"stale snapshot: generation {gen} behind replica "
+                    f"generation {self.generation}")
+            n_blocks = int(payload["n_blocks"])
+            while len(self._blocks) < n_blocks:
+                self._blocks.append(None)
+            for i in payload.get("released") or []:
+                self._blocks[int(i)] = None
+            installed = 0
+            for k, arrs in (payload.get("blocks") or {}).items():
+                blk: Dict[str, np.ndarray] = {}
+                for leaf in LEAVES:
+                    a = np.array(arrs[leaf], np.float64)
+                    want = (self.block_size,) + LEAF_SHAPES[leaf]
+                    if a.shape != want:
+                        raise ValueError(
+                            f"snapshot block {k} leaf {leaf!r} has shape "
+                            f"{a.shape}, expected {want}")
+                    blk[leaf] = a
+                self._blocks[int(k)] = blk
+                installed += 1
+            self._rows = {str(k): int(v)
+                          for k, v in payload["rows"].items()}
+            self._next_row = (max(self._rows.values()) + 1
+                              if self._rows else 0)
+            self._block_gen = {int(k): int(v) for k, v in
+                               (payload.get("block_gen") or {}).items()}
+            self.generation = gen
+            if payload.get("namespaces") is not None:
+                self._saved_states = dict(payload["namespaces"])
+            self._snap = None
+            return installed
 
     # ---- row eviction -------------------------------------------------------
     def evict(self, tenant: str, workflow: str) -> int:

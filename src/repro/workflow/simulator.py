@@ -54,15 +54,9 @@ class SimResult:
         return {n: sum(b - a for a, b in iv) for n, iv in self.node_busy.items()}
 
 
-@dataclass
-class SpeculationPolicy:
-    """Knobs for uncertainty-driven speculative re-execution in
-    `execute_adaptive`: declare a running task a straggler once its elapsed
-    time exceeds the posterior q-quantile on its node, and duplicate it on
-    the best idle node (one backup per task; a speculation budget cap and
-    multi-backup policies are ROADMAP follow-ups)."""
-    q: float = 0.95
-    check_interval_s: float = 30.0
+# SpeculationPolicy lives with the rest of the straggler decision plane
+# (it gained budget caps there); re-exported here for existing callers.
+from repro.sched.straggler import SpeculationPolicy  # noqa: E402,F401
 
 
 @dataclass
@@ -311,18 +305,28 @@ def _progress_check(loop: _EventLoop, planner,
                     spec: SpeculationPolicy) -> None:
     """Consult the planner's speculation policy for every running primary
     without a backup; launch backups on idle nodes (greedily, fastest
-    predicted idle node per straggler)."""
+    predicted idle node per straggler), within the policy's budget caps
+    (`max_total_backups` lifetime, `max_concurrent_backups` in flight —
+    a straggler denied a slot stays a candidate on later heartbeats)."""
     idle = loop.idle_nodes()
+    live = sum(1 for ls in loop._launches.values() if len(ls) > 1)
     for uid, (name, start) in sorted(loop.running.items(),
                                      key=lambda kv: kv[1][1]):
         if not idle:
             return
+        if (spec.max_total_backups is not None
+                and loop.n_backups >= spec.max_total_backups):
+            return                           # lifetime budget spent
+        if (spec.max_concurrent_backups is not None
+                and live >= spec.max_concurrent_backups):
+            return                           # every backup slot in use
         if len(loop._launches.get(uid, ())) > 1:
             continue                         # already speculated
         dec = planner.decide_speculation(uid, name, loop.now - start, idle,
                                          q=spec.q)
         if dec.speculate and dec.backup_node:
             if loop.launch_backup(uid, dec.backup_node):
+                live += 1
                 idle = [n for n in idle if n.name != dec.backup_node]
 
 

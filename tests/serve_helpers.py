@@ -1,0 +1,42 @@
+"""Shared fixtures for the distributed-serving tests: a deterministic
+multi-tenant predictor fleet and the shard bootstrap entry point that
+shard subprocesses import (`tests.serve_helpers:bootstrap` — the repo
+root is on sys.path for `python -m repro.serve.shard` children because
+the supervisor sets cwd to it)."""
+import numpy as np
+
+from repro.core.microbench import simulate_microbench
+from repro.core.predictor import LotaruPredictor
+from repro.core.traces import TraceRow
+from repro.online import OnlinePredictor
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+
+TENANTS = [("acme", "rnaseq"), ("globex", "atacseq"),
+           ("initech", "chipseq"), ("umbrella", "mag")]
+TASKS = ("bwa", "idx", "sort")
+
+
+def make_traces(task, n=6, slope=30.0, base=4.0):
+    return [TraceRow("wf", task, "local", s, base + slope * s)
+            for s in np.linspace(0.05, 0.4, n)]
+
+
+def make_predictor(tasks=TASKS, salt=0):
+    lot = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    traces = []
+    for j, t in enumerate(tasks):
+        traces += make_traces(t, slope=20.0 + 7 * j + salt, base=2.0 + j)
+    return OnlinePredictor(lot.fit(traces))
+
+
+def make_benches():
+    return {n.name: simulate_microbench(n, 1) for n in TARGET_MACHINES}
+
+
+def bootstrap(shard_id, shard_map):
+    """Shard bootstrap: every tenant's predictor, identically rebuilt in
+    any process (deterministic fit) — the shard binds only the
+    namespaces the map places on it."""
+    benches = make_benches()
+    return {(t, w): (make_predictor(salt=i), benches)
+            for i, (t, w) in enumerate(TENANTS)}

@@ -316,3 +316,45 @@ def test_static_execution_unaffected_by_speculation_plumbing():
     res = execute_schedule(dag, sched, nodes, true_rt)
     assert res.n_backups == 0 and res.backup_waste_s == 0.0
     assert len(res.records) == len(dag.tasks)
+
+
+def test_speculation_budget_caps_bound_duplicate_work():
+    """max_total_backups / max_concurrent_backups bound duplicate work:
+    a zero budget launches nothing, a small budget launches at most that
+    many backups while still beating the uncapped-straggler makespan."""
+    gt, dag, lot, benches = _experiment("bacass")
+    nodes = list(TARGET_MACHINES)
+    true_rt = lambda u, n: gt.runtime(dag.tasks[u].task_name,
+                                      dag.tasks[u].input_gb, n, u)
+    base = execute_adaptive(
+        dag, nodes,
+        OnlineReschedulingPlanner(dag, nodes,
+                                  OnlinePredictor(lot, benches=benches),
+                                  benches=benches), true_rt)
+    victims = {r.uid for r in
+               sorted(base.records, key=lambda r: r.start)[-3:]}
+    sf = lambda u: 10.0 if u in victims else 1.0
+
+    def run_with(policy):
+        return execute_adaptive(
+            dag, nodes,
+            OnlineReschedulingPlanner(dag, nodes,
+                                      OnlinePredictor(lot, benches=benches),
+                                      benches=benches),
+            true_rt, straggler_factor=sf, speculation=policy)
+
+    none = run_with(None)
+    uncapped = run_with(SpeculationPolicy(q=0.95, check_interval_s=15.0))
+    capped = run_with(SpeculationPolicy(q=0.95, check_interval_s=15.0,
+                                        max_concurrent_backups=1,
+                                        max_total_backups=2))
+    zero = run_with(SpeculationPolicy(q=0.95, check_interval_s=15.0,
+                                      max_total_backups=0))
+
+    assert zero.n_backups == 0
+    assert zero.makespan == pytest.approx(none.makespan)
+    assert 1 <= capped.n_backups <= 2                # bounded duplicates
+    assert capped.n_backups <= uncapped.n_backups
+    assert capped.backup_waste_s <= uncapped.backup_waste_s + 1e-9
+    assert capped.makespan < none.makespan           # gains retained
+    assert sorted(r.uid for r in capped.records) == sorted(dag.tasks)

@@ -396,3 +396,142 @@ def test_evicted_block_file_removed_on_incremental_save(tmp_path, rng):
     restored = PosteriorStore.restore(path)
     assert restored.num_free_blocks == 1             # released block stays
     assert restored.get(TaskKey("b", "w", "b0"))["mu"].shape == (2,)
+
+
+# --- per-tenant refresh budgets --------------------------------------------------
+def test_refresh_budget_caps_tasks_per_tenant_per_cycle(rng):
+    """max_tasks_per_tenant_per_cycle defers (never drops) excess due
+    tasks: each cycle refreshes at most N per tenant and the remainder
+    surfaces in the next cycle."""
+    store = PosteriorStore()
+    online, svc = _warm_service(store, "acme", ("bwa", "idx", "sort"), rng)
+    for t in ("idx", "sort"):                        # all three due
+        _observe_local(online, t, 5, rng)
+        svc.predict_batch([PredictionQuery(t, None, 1.0)])
+    refresher = FleetRefresher(store, RefreshPolicy(
+        every_n=4, max_tasks_per_tenant_per_cycle=1))
+    seen = []
+    for _ in range(3):
+        due = refresher.due()
+        assert len(due) == 1                         # capped per cycle
+        seen.append(due[0][1])
+        assert refresher.refresh().n_tasks == 1
+    assert sorted(seen) == ["bwa", "idx", "sort"]    # deferred, not dropped
+    assert refresher.due() == []
+
+
+def test_refresh_budget_uncapped_tenant_unaffected(rng):
+    """the cap is per tenant: a second tenant's backlog is not throttled
+    by the first tenant's budget consumption."""
+    store = PosteriorStore()
+    _warm_service(store, "acme", ("a0", "a1"), rng)
+    online_b, svc_b = _warm_service(store, "globex", ("b0", "b1"), rng)
+    _observe_local(online_b, "b1", 5, rng)
+    svc_b.predict_batch([PredictionQuery("b1", None, 1.0)])
+    refresher = FleetRefresher(store, RefreshPolicy(
+        every_n=4, max_tasks_per_tenant_per_cycle=2))
+    due = refresher.due()
+    by_tenant = {}
+    for b, t in due:
+        by_tenant.setdefault(b.tenant, []).append(t)
+    assert len(by_tenant["acme"]) == 2               # hit the cap
+    assert len(by_tenant["globex"]) == 2             # own budget
+    assert refresher.refresh().n_tasks == 4
+
+
+def test_refresh_min_interval_defers_recently_refreshed(rng):
+    """min_interval_s suppresses re-refreshing a task that was just
+    refreshed, even if its completion counter is due again."""
+    store = PosteriorStore()
+    online, svc = _warm_service(store, "acme", ("bwa",), rng)
+    refresher = FleetRefresher(store, RefreshPolicy(
+        every_n=4, min_interval_s=3600.0))
+    assert len(refresher.due()) == 1
+    assert refresher.refresh().n_tasks == 1
+    _observe_local(online, "bwa", 5, rng)            # due by counter again
+    svc.predict_batch([PredictionQuery("bwa", None, 1.0)])
+    assert refresher.due() == []                     # ...but too soon
+    # age the last-refresh stamp past the interval: due again
+    for k in refresher._last_refresh:
+        refresher._last_refresh[k] -= 7200.0
+    assert len(refresher.due()) == 1
+    assert refresher.refresh().n_tasks == 1
+
+
+# --- checkpoint retention / GC ---------------------------------------------------
+def test_save_keep_last_retains_and_restores_old_generations(tmp_path, rng):
+    """keep_last preserves superseded block/manifest generations as
+    hard-linked history files; restore(generation=...) serves the old
+    state bit-identically until retention prunes it."""
+    store = PosteriorStore(block_size=2)
+    online, svc = _warm_service(store, "t", ("a0", "a1", "a2", "a3"), rng)
+    path = str(tmp_path / "ckpt")
+    store.save(path, keep_last=2)
+    g1 = store.generation
+    mu_old = store.get(TaskKey("t", "w", "a0"))["mu"].copy()
+
+    online.observe(TaskCompletion("wf", "u", "a0", "local", 2.0, 99.0))
+    svc.predict_batch([PredictionQuery("a0", None, 1.0)])
+    store.save(path, incremental=True, keep_last=2)
+    g2 = store.generation
+    assert g2 > g1
+    # the superseded manifest + rewritten block were preserved
+    assert os.path.exists(os.path.join(path, f"manifest.g{g1}.json"))
+    old = PosteriorStore.restore(path, generation=g1)
+    np.testing.assert_array_equal(old.get(TaskKey("t", "w", "a0"))["mu"],
+                                  mu_old)
+    # the live restore serves the NEW state
+    new = PosteriorStore.restore(path)
+    assert not np.array_equal(new.get(TaskKey("t", "w", "a0"))["mu"],
+                              mu_old)
+
+
+def test_save_keep_last_prunes_history_and_orphans(tmp_path, rng):
+    """retention: only the newest keep_last-1 superseded generations stay
+    restorable; older history files, stray block files, and staging temps
+    are garbage-collected."""
+    store = PosteriorStore(block_size=2)
+    online, svc = _warm_service(store, "t", ("a0", "a1"), rng)
+    path = str(tmp_path / "ckpt")
+    store.save(path, keep_last=2)
+    gens = [store.generation]
+    for i in range(2):
+        online.observe(TaskCompletion("wf", f"u{i}", "a0", "local",
+                                      2.0 + i, 70.0 + i))
+        svc.predict_batch([PredictionQuery("a0", None, 1.0)])
+        # plant an orphan + a staging temp: GC must remove both
+        orphan = os.path.join(path, "block_9.npz")
+        temp = os.path.join(path, "block_0.npz.tmp")
+        open(orphan, "wb").close()
+        open(temp, "wb").close()
+        store.save(path, incremental=True, keep_last=2)
+        gens.append(store.generation)
+        assert not os.path.exists(orphan)
+        assert not os.path.exists(temp)
+    # keep_last=2 -> exactly one superseded generation stays restorable
+    hist = sorted(f for f in os.listdir(path)
+                  if f.startswith("manifest.g"))
+    assert hist == [f"manifest.g{gens[-2]}.json"]
+    with pytest.raises(FileNotFoundError):
+        PosteriorStore.restore(path, generation=gens[0])
+    assert PosteriorStore.restore(
+        path, generation=gens[-2]).generation == gens[-2]
+
+
+def test_save_keep_last_one_keeps_live_only(tmp_path, rng):
+    store = PosteriorStore(block_size=2)
+    online, svc = _warm_service(store, "t", ("a0", "a1"), rng)
+    path = str(tmp_path / "ckpt")
+    store.save(path, keep_last=1)
+    online.observe(TaskCompletion("wf", "u", "a0", "local", 2.0, 80.0))
+    svc.predict_batch([PredictionQuery("a0", None, 1.0)])
+    store.save(path, incremental=True, keep_last=1)
+    assert not [f for f in os.listdir(path) if ".g" in f]    # no history
+    assert PosteriorStore.restore(path).generation == store.generation
+
+
+def test_save_keep_last_validation(tmp_path, rng):
+    store = PosteriorStore()
+    _warm_service(store, "t", ("a0",), rng)
+    with pytest.raises(ValueError, match="keep_last"):
+        store.save(str(tmp_path / "c"), keep_last=0)

@@ -1,0 +1,270 @@
+"""The serving plane in-process: loopback shard parity with the local
+frontend, coalesced fan-out, observe acks + write-ahead oplog, digest,
+backpressure round-trip (QueueFullError survives the wire), shard-map
+version-skew self-healing, retry-budget semantics, and replica
+snapshot-shipping."""
+import asyncio
+import os
+
+import numpy as np
+import pytest
+
+from repro.online import TaskCompletion
+from repro.serve import (OpLog, ReplicaServer, ReplicaShipper, RetryPolicy,
+                         ServingClient, ShardInfo, ShardMap, boot_shard,
+                         state_digest)
+from repro.serve.shard import ShardServer
+from repro.store import AsyncPredictionFrontend, PosteriorStore
+from repro.store.frontend import QueueFullError
+from serve_helpers import TENANTS, bootstrap, make_benches, make_predictor
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+async def _boot_fleet(n, tmp, **opts):
+    """N in-process shard servers + a fresh client on their final map."""
+    sids = [f"s{i}" for i in range(n)]
+    m = ShardMap([ShardInfo(s, "127.0.0.1", 0) for s in sids])
+    servers = []
+    for sid in sids:
+        srv = boot_shard(
+            sid, m, bootstrap,
+            checkpoint_dir=os.path.join(tmp, sid + "_ckpt"),
+            oplog_path=os.path.join(tmp, sid + ".oplog"),
+            window_s=0.001, **opts)
+        await srv.start()
+        m = m.with_address(sid, "127.0.0.1", srv.port)
+        servers.append(srv)
+    for srv in servers:
+        srv.map = m
+    return servers, ServingClient(m)
+
+
+async def _close_fleet(servers, client):
+    await client.close()
+    for srv in servers:
+        await srv.aclose()
+
+
+# --- prediction parity ---------------------------------------------------------
+def test_loopback_predict_matches_local_frontend(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            t, w = TENANTS[0]
+            queries = [("bwa", None, 1.0), ("idx", "A1", 3.0),
+                       ("sort", "N2", 0.4)]
+            got = await client.predict(queries, t, w)
+            # identical predictor, identical frontend code path, locally
+            store = PosteriorStore()
+            store.bind(t, w, make_predictor(salt=0), make_benches())
+            with AsyncPredictionFrontend(store, window_s=0.001) as fe:
+                class Q:
+                    def __init__(s, a, n, gb):
+                        s.task, s.node, s.input_gb = a, n, gb
+                want = fe.predict([Q(*q) for q in queries], t, w)
+            np.testing.assert_array_equal(got, np.asarray(want))
+            assert got.shape == (3, 3)
+            assert np.all(got[:, 1] <= got[:, 0]) \
+                and np.all(got[:, 0] <= got[:, 2])
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_predict_many_coalesces_across_shards(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            batches = [(t, w, [("bwa", None, 1.0 + i), ("idx", "C2", 2.0)])
+                       for i, (t, w) in enumerate(TENANTS)]
+            outs = await client.predict_many(batches)
+            assert len(outs) == len(TENANTS)
+            for o in outs:
+                assert o.shape == (2, 3) and np.isfinite(o).all()
+            # singles agree with the coalesced round
+            for (t, w, qs), o in zip(batches, outs):
+                np.testing.assert_array_equal(
+                    await client.predict(qs, t, w), o)
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_predict_matrix_over_the_wire(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            t, w = TENANTS[1]
+            tasks = [("bwa", 1.0), ("idx", 2.5), ("sort", 0.3)]
+            nodes = [None, "A1", "N2"]
+            mean, std = await client.predict_matrix(t, w, tasks, nodes)
+            assert mean.shape == std.shape == (3, 3)
+            assert np.isfinite(mean).all() and (std >= 0).all()
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+# --- observe / durability ------------------------------------------------------
+def test_observe_acks_and_write_ahead_oplog(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(1, str(tmp_path))
+        try:
+            t, w = TENANTS[0]
+            seqs = [await client.observe(
+                TaskCompletion(w, f"u{i}", "bwa", "local",
+                               1.0 + i, 30.0 + 20 * i), t, w)
+                for i in range(5)]
+            assert seqs == [1, 2, 3, 4, 5]          # dense ack sequence
+            h = await client.health("s0")
+            assert h["seq"] == 5
+            # every acknowledged observation is already on disk
+            recs = list(OpLog.replay(os.path.join(str(tmp_path),
+                                                  "s0.oplog")))
+            assert [r["q"] for r in recs] == seqs
+            assert all(r["t"] == t and r["w"] == w for r in recs)
+            # digest responds and is stable across identical state
+            d1 = await client.digest(t, w)
+            assert d1 == await client.digest(t, w)
+            assert d1 == state_digest(
+                servers[0].store.binding(t, w).predictor)
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+# --- backpressure --------------------------------------------------------------
+def test_queue_full_round_trips_to_caller(tmp_path):
+    async def go():
+        sid = "s0"
+        m = ShardMap([ShardInfo(sid, "127.0.0.1", 0)])
+        srv = ShardServer(sid, m, window_s=0.5, max_pending_batches=1)
+        pred = make_predictor(salt=0)
+        srv.store.bind(*TENANTS[0], pred, make_benches())
+        await srv.start()
+        m = m.with_address(sid, "127.0.0.1", srv.port)
+        srv.map = m
+        client = ServingClient(m, RetryPolicy(max_attempts=2,
+                                              base_backoff_s=0.01))
+        try:
+            t, w = TENANTS[0]
+            qs = [("bwa", None, 1.0)]
+            # first request parks in the 0.5s window and fills the queue;
+            # the overflow error must come back as QueueFullError, not a
+            # generic RemoteError
+            first = asyncio.ensure_future(client.predict(qs, t, w))
+            await asyncio.sleep(0.05)
+            with pytest.raises(QueueFullError):
+                await asyncio.gather(*[client.predict(qs, t, w)
+                                       for _ in range(4)])
+            assert (await first).shape == (1, 3)    # parked one still served
+        finally:
+            await client.close()
+            await srv.aclose()
+    _run(go())
+
+
+# --- map version skew ----------------------------------------------------------
+def test_stale_client_map_self_heals(tmp_path):
+    async def go():
+        stale = ShardMap([ShardInfo("s0", "127.0.0.1", 0)])     # v1: s0 only
+        grown = stale.with_shard("s1", "127.0.0.1", 0)          # v2: +s1
+        servers = []
+        for sid in ("s0", "s1"):
+            srv = boot_shard(sid, grown, bootstrap, window_s=0.001)
+            await srv.start()
+            grown = grown.with_address(sid, "127.0.0.1", srv.port)
+            stale = stale.with_address("s0", "127.0.0.1", srv.port) \
+                if sid == "s0" else stale
+            servers.append(srv)
+        for srv in servers:
+            srv.map = grown
+        # force at least one namespace onto s1 under the grown map
+        moved = [(t, w) for t, w in TENANTS
+                 if grown.shard_for(f"{t}/{w}") == "s1"]
+        assert moved, "fixture fleet must place something on s1"
+        # rebuild the stale map at the *final* version-1 address set
+        stale = ShardMap([ShardInfo("s0", *grown.address_of("s0"))])
+        client = ServingClient(stale)
+        try:
+            t, w = moved[0]
+            out = await client.predict([("bwa", None, 2.0)], t, w)
+            assert out.shape == (1, 3)
+            # one wrong_shard round-trip adopted the newer map
+            assert client.map.version == grown.version
+            assert client.map.shard_for(f"{t}/{w}") == "s1"
+        finally:
+            await client.close()
+            for srv in servers:
+                await srv.aclose()
+    _run(go())
+
+
+# --- retry budget --------------------------------------------------------------
+def test_retry_budget_exhaustion_surfaces_original_error():
+    async def go():
+        # nobody listens here: every attempt fails at connect
+        m = ShardMap([ShardInfo("s0", "127.0.0.1", 1)])
+        client = ServingClient(m, RetryPolicy(max_attempts=3,
+                                              base_backoff_s=0.005,
+                                              timeout_s=1.0))
+        try:
+            with pytest.raises((ConnectionError, OSError)) as exc:
+                await client.predict([("bwa", None, 1.0)], *TENANTS[0])
+            # the LAST underlying error, not a retry wrapper
+            assert not type(exc.value).__name__.startswith("Transport")
+        finally:
+            await client.close()
+    _run(go())
+
+
+# --- replicas ------------------------------------------------------------------
+def test_replica_ship_install_digest_and_reads(tmp_path):
+    async def go():
+        t, w = TENANTS[0]
+        store = PosteriorStore()
+        pred = make_predictor(salt=0)
+        store.bind(t, w, pred, make_benches())
+        replica = await ReplicaServer().start()
+        shipper = ReplicaShipper(store, [("127.0.0.1", replica.port)])
+        client = ServingClient(       # replicas speak the same wire
+            ShardMap([ShardInfo("r0", "127.0.0.1", replica.port)]))
+        try:
+            installed = await shipper.ship_once()
+            assert len(installed) == 1 and installed[0] >= 1  # full first ship
+            assert replica.installs == 1
+            # replicated streaming state digests equal the primary's
+            r = await client._call("digest", {"ns": f"{t}/{w}"},
+                                   shard_id="r0")
+            assert r["sha256"] == state_digest(pred)
+            # base reads come off the replicated rows
+            binding = store.binding(t, w)
+            keys = [binding.key_str(n) for n in ("bwa", "idx")]
+            r = await client._call("predict_base",
+                                   {"keys": keys, "x": [1.0, 2.0]},
+                                   shard_id="r0")
+            p = np.asarray(r["p"])
+            assert p.shape == (2, 3) and np.isfinite(p).all()
+            # deltas: new observations -> a second, incremental ship
+            for i in range(4):
+                pred.observe(TaskCompletion(w, f"u{i}", "bwa", "local",
+                                            1.0 + i, 25.0 + 20 * i))
+            gen_cursor = shipper.shipped[("127.0.0.1", replica.port)]
+            assert gen_cursor >= 0
+            await shipper.ship_once()
+            assert replica.installs == 2
+            r2 = await client._call("digest", {"ns": f"{t}/{w}"},
+                                    shard_id="r0")
+            assert r2["sha256"] == state_digest(pred)
+            # writes are refused
+            from repro.serve.client import RemoteError
+            with pytest.raises(RemoteError, match="read_only|never accept"):
+                await client._call("observe", {"t": t, "w": w, "c": {}},
+                                   shard_id="r0")
+        finally:
+            await client.close()
+            await replica.aclose()
+    _run(go())

@@ -1,0 +1,176 @@
+"""Wire framing and consistent-hash placement for the serving plane:
+frame round-trips (ndarray payloads included), truncated/oversized frame
+rejection, torn-tail-tolerant file framing, and the ShardMap protocol
+(stable placement, failover readmission that moves nothing, wire
+round-trip, rebalance accounting)."""
+import asyncio
+import io
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serve import placement, wire
+from repro.serve.placement import ShardInfo, ShardMap, stable_hash
+
+
+# --- encode/decode -------------------------------------------------------------
+def test_encode_decode_roundtrip_scalars_and_nested():
+    obj = {"op": "predict", "i": 7, "t": "acme", "x": [["bwa", None, 1.5]],
+           "nested": {"a": [1, 2.5, True, None, "s"], "b": b"\x00\xffraw"}}
+    assert wire.decode(wire.encode(obj)) == obj
+
+
+def test_encode_decode_roundtrip_ndarray():
+    for arr in (np.arange(12, dtype=np.float64).reshape(3, 4),
+                np.float32([[1.5, -2.5, 3.5]]),
+                np.array([], dtype=np.float64)):
+        out = wire.decode(wire.encode({"p": arr}))["p"]
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        np.testing.assert_array_equal(out, arr)
+        assert out.flags.writeable          # not a frombuffer view
+
+
+def test_numpy_scalars_encode_as_python():
+    out = wire.decode(wire.encode({"a": np.float64(1.5),
+                                   "b": np.int64(3),
+                                   "c": np.bool_(True)}))
+    assert out == {"a": 1.5, "b": 3, "c": True}
+
+
+def test_frame_too_large_refused_on_encode():
+    big = np.zeros(wire.MAX_FRAME // 8 + 16, dtype=np.float64)
+    with pytest.raises(wire.FrameTooLarge):
+        wire.frame({"p": big})
+
+
+# --- asyncio stream framing ----------------------------------------------------
+def _stream_with(data: bytes) -> asyncio.StreamReader:
+    r = asyncio.StreamReader()
+    r.feed_data(data)
+    r.feed_eof()
+    return r
+
+
+def test_read_frame_roundtrip_and_clean_eof():
+    async def go():
+        data = wire.frame({"i": 1}) + wire.frame({"i": 2})
+        r = _stream_with(data)
+        assert (await wire.read_frame(r))["i"] == 1
+        assert (await wire.read_frame(r))["i"] == 2
+        assert await wire.read_frame(r) is None      # clean EOF, no error
+    asyncio.run(go())
+
+
+def test_read_frame_truncated_header_and_payload():
+    async def go():
+        with pytest.raises(wire.TruncatedFrame):
+            await wire.read_frame(_stream_with(b"\x00\x00"))   # partial header
+        whole = wire.frame({"i": 1, "pad": "x" * 64})
+        with pytest.raises(wire.TruncatedFrame):
+            await wire.read_frame(_stream_with(whole[:-5]))    # torn payload
+    asyncio.run(go())
+
+
+def test_read_frame_oversized_header_rejected():
+    async def go():
+        evil = struct.pack(">I", wire.MAX_FRAME + 1) + b"x"
+        with pytest.raises(wire.FrameTooLarge):
+            await wire.read_frame(_stream_with(evil))
+    asyncio.run(go())
+
+
+# --- file framing (oplog) ------------------------------------------------------
+def test_file_framing_roundtrip_and_torn_tail(tmp_path):
+    p = tmp_path / "log.bin"
+    with open(p, "ab") as f:
+        for i in range(5):
+            wire.append_frame(f, {"q": i + 1, "v": "x" * 10})
+    # tear the tail mid-frame: replay must still see every complete record
+    raw = p.read_bytes()
+    p.write_bytes(raw[:-7])
+    with open(p, "rb") as f:
+        recs = [rec for _, rec in wire.iter_frames(f)]
+    assert [r["q"] for r in recs] == [1, 2, 3, 4]
+
+
+def test_file_framing_corrupt_header_stops_iteration(tmp_path):
+    p = tmp_path / "log.bin"
+    with open(p, "ab") as f:
+        wire.append_frame(f, {"q": 1})
+        f.write(struct.pack(">I", wire.MAX_FRAME + 99))  # garbage header
+        f.write(b"junk")
+    with open(p, "rb") as f:
+        recs = [rec for _, rec in wire.iter_frames(f)]
+    assert [r["q"] for r in recs] == [1]
+
+
+def test_json_fallback_same_wire_shape(monkeypatch):
+    """without msgpack the JSON+base64 path must round-trip the same
+    objects (bytes and ndarrays included)."""
+    monkeypatch.setattr(wire, "msgpack", None)
+    obj = {"i": 3, "b": b"\x01\x02", "p": np.float32([[1, 2, 3]])}
+    out = wire.decode(wire.encode(obj))
+    assert out["i"] == 3 and out["b"] == b"\x01\x02"
+    np.testing.assert_array_equal(out["p"], obj["p"])
+
+
+# --- placement -----------------------------------------------------------------
+def _map(n=3, version=1):
+    return ShardMap([ShardInfo(f"s{i}", "127.0.0.1", 9000 + i)
+                     for i in range(n)], version=version)
+
+
+def test_stable_hash_is_process_independent():
+    # pinned value: placement must agree across processes and runs
+    assert stable_hash("acme/rnaseq") == int.from_bytes(
+        __import__("hashlib").blake2b(b"acme/rnaseq",
+                                      digest_size=8).digest(), "big")
+
+
+def test_shard_for_is_deterministic_and_total():
+    m1, m2 = _map(), _map()
+    names = [f"t{i}/w{i % 5}" for i in range(200)]
+    owners = [m1.shard_for(ns) for ns in names]
+    assert owners == [m2.shard_for(ns) for ns in names]
+    assert set(owners) <= {"s0", "s1", "s2"}
+    # every shard gets a reasonable share (vnodes spread)
+    for sid in ("s0", "s1", "s2"):
+        assert owners.count(sid) > 20
+
+
+def test_with_address_moves_no_namespaces():
+    m = _map()
+    names = [f"t{i}/w" for i in range(300)]
+    m2 = m.with_address("s1", "127.0.0.1", 19999)
+    assert m2.version == m.version + 1
+    assert m2.address_of("s1") == ("127.0.0.1", 19999)
+    assert m.moved(m2, names) == []              # ring untouched
+
+
+def test_add_remove_shard_moves_about_one_nth():
+    m = _map(3)
+    names = [f"t{i}/w{i}" for i in range(600)]
+    grown = m.with_shard("s3", "127.0.0.1", 9003)
+    moved = m.moved(grown, names)
+    assert 0 < len(moved) < len(names) * 0.5     # ~1/4 expected, bounded
+    assert all(grown.shard_for(ns) == "s3" for ns in moved)
+    shrunk = m.without_shard("s2")
+    for ns in names:                              # survivors keep ownership
+        if m.shard_for(ns) != "s2":
+            assert shrunk.shard_for(ns) == m.shard_for(ns)
+
+
+def test_wire_roundtrip_preserves_placement():
+    m = _map(3, version=7)
+    m2 = ShardMap.from_wire(m.to_wire())
+    assert m2.version == 7
+    names = [f"t{i}/w" for i in range(100)]
+    assert [m.shard_for(ns) for ns in names] == \
+        [m2.shard_for(ns) for ns in names]
+
+
+def test_empty_map_rejected():
+    with pytest.raises(ValueError):
+        ShardMap([])
+    assert placement.VNODES >= 16
