@@ -1,20 +1,24 @@
 """Replan-latency benchmark: what one in-flight replanning round costs
-before and after the decision plane.
+across the three generations of the decision path, swept over problem
+sizes.
 
-Scenario: a 100-task x 20-node frontier replan — the round
-`online.rescheduler` runs on every drift event.  Two implementations of
-the same decision:
+Scenario: a frontier replan — the round `online.rescheduler` runs on
+every drift event.  Three implementations of the same decision:
 
   * scalar-callback — the pre-plane path: `heft_schedule_reference` pulls
     every (task, node) runtime through its own `PredictionService` call,
     so one replan costs O(T x N) store syncs + gathers + predictive
-    dispatches (plus extra calls per placement candidate);
-  * matrix — the decision plane: ONE `predict_matrix` dispatch
+    dispatches (plus extra calls per placement candidate).  Only timed at
+    the smallest size — it is minutes at fleet scale;
+  * matrix — the PR-4 decision plane: ONE `predict_matrix` dispatch
     materializes the (T, N) mean/std arrays, then the vectorized NumPy
-    HEFT core ranks and places off them.
+    HEFT core ranks and places off them (rebuilt every round);
+  * fused — the resident plane (`sched.fused.FusedPlane`): posterior rows
+    and the cost view stay resident, only dirty rows re-predict, and the
+    candidate-EFT sweep is one jitted dispatch.
 
-Both paths run the same finalize arithmetic, so the schedules must be
-bit-identical — the benchmark asserts that before it times anything.
+All paths run the same arithmetic, so the schedules must be bit-identical
+— asserted at every size before anything is timed.
 
   PYTHONPATH=src python -m benchmarks.replan_latency
 """
@@ -62,15 +66,14 @@ def _build(n_tasks: int, n_nodes: int, seed: int):
     return dag, nodes, svc
 
 
-def run(n_tasks: int = 100, n_nodes: int = 20, seed: int = 0,
-        repeats: int = 5, quiet: bool = False) -> dict:
+SIZES = ((100, 20), (500, 50), (1000, 100))
+SCALAR_MAX_CELLS = 100 * 20       # the O(T x N)-dispatch path is minutes
+                                  # beyond this; matrix is its stand-in
+
+
+def _one_size(n_tasks: int, n_nodes: int, seed: int, repeats: int) -> dict:
+    from repro.sched.fused import FusedPlane
     dag, nodes, svc = _build(n_tasks, n_nodes, seed)
-
-    def scalar_predict(uid, node):
-        t = dag.tasks[uid]
-        return float(svc.predict_batch(
-            [PredictionQuery(t.task_name, node.name, t.input_gb)])[0][0])
-
     entries = [(u, dag.tasks[u].task_name, dag.tasks[u].input_gb)
                for u in dag.tasks]
 
@@ -78,30 +81,70 @@ def run(n_tasks: int = 100, n_nodes: int = 20, seed: int = 0,
         mat = PredictionMatrix.from_service(svc, entries, nodes)
         return heft_schedule_matrix(dag, nodes, mat)
 
-    # correctness first: the two paths must produce the same schedule
-    ref = heft_schedule_reference(dag, nodes, scalar_predict)
-    vec = matrix_round()
-    parity = (ref.assignment == vec.assignment and ref.est == vec.est)
-    assert parity, "matrix replan diverged from the scalar reference"
+    plane = FusedPlane(svc, nodes, dag=dag)
 
-    # best-of-repeats on BOTH sides, so a transient stall in either path
-    # cannot skew the reported ratio
-    scalar_s = min(_timed(lambda: heft_schedule_reference(
-        dag, nodes, scalar_predict)) for _ in range(repeats))
-    matrix_s = min(_timed(matrix_round) for _ in range(repeats))
-    speedup = scalar_s / matrix_s
-    out = {"n_tasks": n_tasks, "n_nodes": n_nodes,
-           "scalar_callback_s": scalar_s, "matrix_s": matrix_s,
-           "speedup": speedup, "bit_parity": parity,
+    def fused_round():
+        return plane.schedule(dag)
+
+    vec = matrix_round()
+    fus = fused_round()                       # warms + compiles the sweep
+    parity = (vec.assignment == fus.assignment and vec.order == fus.order
+              and vec.est == fus.est)
+    assert parity, "fused replan diverged from the matrix path"
+    row = {"n_tasks": n_tasks, "n_nodes": n_nodes, "bit_parity": parity,
            "predicted_makespan_s": vec.predicted_makespan}
+
+    if n_tasks * n_nodes <= SCALAR_MAX_CELLS:
+        def scalar_predict(uid, node):
+            t = dag.tasks[uid]
+            return float(svc.predict_batch(
+                [PredictionQuery(t.task_name, node.name, t.input_gb)])[0][0])
+        ref = heft_schedule_reference(dag, nodes, scalar_predict)
+        assert (ref.assignment == vec.assignment and ref.est == vec.est), \
+            "matrix replan diverged from the scalar reference"
+        row["scalar_callback_s"] = min(
+            _timed(lambda: heft_schedule_reference(dag, nodes,
+                                                   scalar_predict))
+            for _ in range(repeats))
+    # best-of-repeats on EVERY side, so a transient stall in one path
+    # cannot skew the reported ratios
+    row["matrix_s"] = min(_timed(matrix_round) for _ in range(repeats))
+    row["fused_s"] = min(_timed(fused_round) for _ in range(repeats))
+    row["fused_speedup"] = row["matrix_s"] / row["fused_s"]
+    if "scalar_callback_s" in row:
+        row["speedup"] = row["scalar_callback_s"] / row["matrix_s"]
+    return row
+
+
+def run(seed: int = 0, repeats: int = 5, quiet: bool = False) -> dict:
+    rows = [_one_size(t, n, seed, repeats) for t, n in SIZES]
+    first = rows[0]
+    out = {"sizes": rows, "bit_parity": all(r["bit_parity"] for r in rows),
+           # legacy top-level fields: the 100x20 round (dashboards key
+           # off these)
+           **{k: first[k] for k in ("n_tasks", "n_nodes",
+                                    "scalar_callback_s", "matrix_s",
+                                    "speedup", "predicted_makespan_s")}}
     if not quiet:
-        print(f"Replan round ({n_tasks} tasks x {n_nodes} nodes): "
-              f"scalar-callback {scalar_s * 1e3:.1f} ms, "
-              f"matrix {matrix_s * 1e3:.1f} ms -> {speedup:.1f}x")
-        print(f"[claim] one-dispatch matrix replan >= 5x faster -> "
-              f"{'PASS' if speedup >= 5.0 else 'FAIL'}")
-        print(f"[claim] bit-identical schedules -> "
-              f"{'PASS' if parity else 'FAIL'}")
+        print("Replan round latency (best of repeats):")
+        print("  size        scalar-callback      matrix       fused"
+              "    fused-vs-matrix")
+        for r in rows:
+            scalar = (f"{r['scalar_callback_s'] * 1e3:12.1f} ms"
+                      if "scalar_callback_s" in r else
+                      "           (skipped)")
+            print(f"  {r['n_tasks']:4d}x{r['n_nodes']:<4d}{scalar}"
+                  f"  {r['matrix_s'] * 1e3:8.1f} ms"
+                  f"  {r['fused_s'] * 1e3:8.1f} ms"
+                  f"     {r['fused_speedup']:6.1f}x")
+        print(f"[claim] one-dispatch matrix replan >= 5x over scalar -> "
+              f"{'PASS' if out['speedup'] >= 5.0 else 'FAIL'}")
+        big = rows[-1]
+        print(f"[claim] fused replan >= 10x over matrix at "
+              f"{big['n_tasks']}x{big['n_nodes']} -> "
+              f"{'PASS' if big['fused_speedup'] >= 10.0 else 'FAIL'}")
+        print(f"[claim] bit-identical schedules at every size -> "
+              f"{'PASS' if out['bit_parity'] else 'FAIL'}")
     return out
 
 

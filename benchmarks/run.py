@@ -21,7 +21,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
-    from benchmarks import (carbon, cost, distributed_serving,
+    from benchmarks import (carbon, cost, distributed_serving, fused_plane,
                             online_adaptation, prediction_error,
                             profiling_time, refresh_overhead, replan_latency,
                             roofline_report, scheduling_makespan,
@@ -37,6 +37,7 @@ def main(argv=None):
         "service_throughput": lambda: service_throughput.run(),
         "straggler_mitigation": lambda: straggler_mitigation.run(),
         "replan_latency": lambda: replan_latency.run(),
+        "fused_plane": lambda: fused_plane.run(),
         "refresh_overhead": lambda: refresh_overhead.run(),
         "roofline": lambda: roofline_report.run(),
         "distributed_serving": lambda: distributed_serving.run()

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bayes_fit import bayes_fit as _bayes_fit_pallas
 from repro.kernels.bayes_fit import bayes_predict as _bayes_predict_pallas
+from repro.kernels.decision_plane import fused_cost as _fused_cost_pallas
+from repro.kernels.decision_plane import fused_cost_ref as _fused_cost_ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 
@@ -56,6 +58,21 @@ def _bayes_predict_jit(x, post, impl: str):
     if impl == "interpret":
         return _bayes_predict_pallas(x, post, interpret=True)
     return ref.bayes_predict_ref(x, post)
+
+
+@functools.partial(jax.jit, static_argnames=("z", "impl"))
+def fused_cost(x, post, factors, *, z: float = 0.0, impl: str = "auto"):
+    """Fused predict -> scale -> quantile cost matrix (T, N) for the
+    decision plane: posterior rows + input sizes + factor matrix in, the
+    HEFT cost matrix out, one dispatch.  impl: auto | pallas | interpret
+    | ref.  The EFT sweep itself lives in `kernels.decision_plane`
+    (`eft_sweep` / `eft_sweep_many` / `eft_sweep_pallas`) — it carries
+    loop state, so it keeps its own jit entry points."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _fused_cost_pallas(x, post, factors, z=z)
+    if impl == "interpret":
+        return _fused_cost_pallas(x, post, factors, z=z, interpret=True)
+    return _fused_cost_ref(x, post, factors, z)
 
 
 _PREDICT_TILE = 1024            # jit shape bucket (avoids a recompile per

@@ -9,23 +9,30 @@ with HEFT under the updated posteriors — running tasks keep their nodes,
 data already produced constrains ready times (finish + comm from the
 producing node to each candidate).
 
-Every planning pass goes through the decision plane: ONE
-`PredictionService.predict_matrix` dispatch materializes the
-tasks x nodes `PredictionMatrix` that the vectorized HEFT core, the drift
-bands, and the speculation policy all read — no per-(task, node) scalar
-callbacks anywhere in the replan path.
+Every planning pass goes through the decision plane, and the plane is
+device-resident: a `FusedPlane` keeps the raw predictive rows for the
+whole workflow across passes and re-gathers only the rows whose store
+blocks moved (generation-tagged dirty tracking), so a planning pass costs
+a dirty-subset predict — not a full gather — plus the fused HEFT engine
+(`sched.fused.fused_heft_schedule`, bit-identical to
+`heft.heft_schedule_matrix`; small frontiers take the NumPy sweep, large
+ones one jitted dispatch).  The drift bands and the speculation policy
+read the same resident matrix.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 from repro.core.extrapolation import MachineBench
 from repro.core.microbench import NodeSpec
 from repro.online.events import PredictionQuery, TaskCompletion
 from repro.online.predictor import OnlinePredictor
 from repro.online.service import PredictionService
-from repro.sched.heft import Schedule, comm_seconds, heft_schedule_matrix
+from repro.sched.fused import FusedPlane, fused_heft_schedule
+from repro.sched.heft import Schedule, comm_seconds
 from repro.sched.plane import PredictionMatrix, TaskDistribution
 from repro.sched.straggler import SpeculationDecision, decide_speculation
 from repro.workflow.dag import TaskInstance, WorkflowDAG
@@ -46,7 +53,8 @@ class OnlineReschedulingPlanner:
                  z: float = 1.96, cooldown: int = 0,
                  store=None, tenant: str = "default",
                  workflow: Optional[str] = None,
-                 quantile: Optional[float] = None):
+                 quantile: Optional[float] = None,
+                 engine: str = "auto"):
         """z: band half-width in predictive stds; cooldown: minimum
         completions between two re-planning passes (0 = none); store: a
         shared PosteriorStore so several concurrent workflows/tenants serve
@@ -55,7 +63,8 @@ class OnlineReschedulingPlanner:
         when executing the same workflow type concurrently, or a later
         planner displaces the earlier one's binding); quantile: schedule on
         the pessimistic mean + z*std at this quantile instead of the mean
-        (uncertainty-aware HEFT)."""
+        (uncertainty-aware HEFT); engine: the fused HEFT sweep engine
+        ('auto' | 'numpy' | 'jit' — all bit-identical, see sched.fused)."""
         self.dag = dag
         self.nodes = nodes
         self.online = online
@@ -71,6 +80,12 @@ class OnlineReschedulingPlanner:
         self.z = z
         self.cooldown = cooldown
         self.quantile = quantile
+        self.engine = engine
+        # device-resident decision plane over the WHOLE workflow: planning
+        # passes re-gather only dirty rows; frontier matrices are row
+        # subsets of the resident one (elementwise per row -> bitwise
+        # equal to a fresh per-frontier gather)
+        self._plane = FusedPlane(self.service, nodes, dag=dag)
         self.stats = RescheduleStats()
         self._since_resched = 10 ** 9
         # uid -> (ref mean, ref std) on its currently-assigned node
@@ -82,16 +97,18 @@ class OnlineReschedulingPlanner:
 
     # ---- batched prediction matrix ------------------------------------------
     def _prediction_matrix(self, uids) -> PredictionMatrix:
-        """The decision-plane matrix for `uids` x nodes in ONE batched
-        dispatch — each planning pass costs one store gather + one
-        predictive kernel call, not T x N scalar predicts (rank +
-        placement + bands + speculation all read from this)."""
+        """The decision-plane matrix for `uids` x nodes, served from the
+        resident `FusedPlane` — a planning pass costs a dirty-row gather +
+        predict (usually a handful of rows), not a full T x N rebuild
+        (rank + placement + bands + speculation all read from this)."""
         uids = list(uids)
-        mat = PredictionMatrix.from_service(
-            self.service,
-            [(u, self.dag.tasks[u].task_name, self.dag.tasks[u].input_gb)
-             for u in uids],
-            self.nodes)
+        full = self._plane.matrix()
+        if len(uids) == len(full.uids):
+            mat = full
+        else:
+            rows = np.asarray([full.uid_index[u] for u in uids], np.int64)
+            mat = PredictionMatrix(tuple(uids), tuple(full.node_names),
+                                   full.means[rows], full.stds[rows])
         for u in uids:
             self._dist_rows[u] = mat.row(u)
         return mat
@@ -108,8 +125,10 @@ class OnlineReschedulingPlanner:
     # ---- executor protocol --------------------------------------------------
     def initial_schedule(self) -> Schedule:
         mat = self._prediction_matrix(self.dag.tasks)
-        sched = heft_schedule_matrix(self.dag, self.nodes, mat,
-                                     quantile=self.quantile)
+        sched = fused_heft_schedule(self.dag, self.nodes, mat,
+                                    quantile=self.quantile,
+                                    rank_cache=self._plane.rank_cache,
+                                    engine=self.engine)
         self._band.clear()
         self._snapshot_bands(mat, sched.assignment)
         self._since_resched = 10 ** 9
@@ -210,9 +229,11 @@ class OnlineReschedulingPlanner:
                     self.dag.tasks[d].output_gb, node_by_name[dn_name], node))
             return ready
 
-        new_sched = heft_schedule_matrix(sub, self.nodes, mat,
-                                         quantile=self.quantile,
-                                         ready_at=ready_at,
-                                         node_available=node_avail)
+        new_sched = fused_heft_schedule(sub, self.nodes, mat,
+                                        quantile=self.quantile,
+                                        ready_at=ready_at,
+                                        node_available=node_avail,
+                                        rank_cache=self._plane.rank_cache,
+                                        engine=self.engine)
         self._snapshot_bands(mat, new_sched.assignment, frontier)
         return new_sched

@@ -84,28 +84,32 @@ def heft_schedule(dag: WorkflowDAG, nodes: List[NodeSpec],
                                 quantile=quantile)
 
 
-def heft_schedule_matrix(dag: WorkflowDAG, nodes: List[NodeSpec],
-                         matrix: PredictionMatrix,
-                         ready_at=None,
-                         node_available: Optional[Dict[str, float]] = None,
-                         quantile: Optional[float] = None) -> Schedule:
-    """Vectorized HEFT over a decision-plane matrix (see heft_schedule)."""
-    order = dag.topo_order()
-    names = [n.name for n in nodes]
-    n_nodes = len(nodes)
-    W = matrix.costs(order, names, quantile=quantile)        # (T, N)
-    row_of = {u: i for i, u in enumerate(order)}
-
-    # pairwise comm structure: comm_seconds(gb, a, b) == 0 on the diagonal,
-    # (gb * 8.0) / min(net_a, net_b) elsewhere — the per-task terms below
-    # reproduce that expression elementwise
+def comm_structure(nodes: List[NodeSpec]) -> Tuple[np.ndarray, np.ndarray]:
+    """(same, gbps_min) pairwise arrays: comm_seconds(gb, a, b) == 0 where
+    `same`, (gb * 8.0) / gbps_min elsewhere — the elementwise form every
+    vectorized path (rank, placement, the fused engine) charges."""
     net = np.asarray([float(getattr(n, "net_gbps", 1.0)) for n in nodes])
     gbps_min = np.minimum.outer(net, net)
     same = np.asarray([[a.name == b.name for b in nodes] for a in nodes])
+    return same, gbps_min
 
-    # upward rank: w_avg as a sequential row sum (cumsum matches the
-    # reference's left-to-right float accumulation), avg pairwise comm per
-    # task from its output size, then the usual reverse-topo recurrence
+
+def upward_ranks(dag: WorkflowDAG, nodes: List[NodeSpec], W: np.ndarray,
+                 order: Optional[List[str]] = None,
+                 same: Optional[np.ndarray] = None,
+                 gbps_min: Optional[np.ndarray] = None) -> Dict[str, float]:
+    """HEFT upward ranks off a (T, N) cost array whose rows follow
+    `order` (default `dag.topo_order()`): w_avg as a sequential row sum
+    (cumsum matches the scalar reference's left-to-right float
+    accumulation), avg pairwise comm per task from its output size, then
+    the usual reverse-topo recurrence.  Shared by `heft_schedule_matrix`
+    and the fused engine's parity tests."""
+    if order is None:
+        order = dag.topo_order()
+    if same is None or gbps_min is None:
+        same, gbps_min = comm_structure(nodes)
+    n_nodes = len(nodes)
+    row_of = {u: i for i, u in enumerate(order)}
     w_avg_arr = W.cumsum(axis=1)[:, -1] / n_nodes if n_nodes else W.sum(1)
     avg_comm: Dict[str, float] = {}
     for u in order:
@@ -119,6 +123,22 @@ def heft_schedule_matrix(dag: WorkflowDAG, nodes: List[NodeSpec],
         for v in succ[u]:
             best = max(best, avg_comm[u] + rank[v])
         rank[u] = float(w_avg_arr[row_of[u]]) + best
+    return rank
+
+
+def heft_schedule_matrix(dag: WorkflowDAG, nodes: List[NodeSpec],
+                         matrix: PredictionMatrix,
+                         ready_at=None,
+                         node_available: Optional[Dict[str, float]] = None,
+                         quantile: Optional[float] = None) -> Schedule:
+    """Vectorized HEFT over a decision-plane matrix (see heft_schedule)."""
+    order = dag.topo_order()
+    names = [n.name for n in nodes]
+    n_nodes = len(nodes)
+    W = matrix.costs(order, names, quantile=quantile)        # (T, N)
+    row_of = {u: i for i, u in enumerate(order)}
+    same, gbps_min = comm_structure(nodes)
+    rank = upward_ranks(dag, nodes, W, order, same, gbps_min)
 
     sched = Schedule(order={name: [] for name in names})
     idx_of_name = {name: j for j, name in enumerate(names)}

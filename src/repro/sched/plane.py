@@ -29,12 +29,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.microbench import NodeSpec
-from repro.sched.straggler import ndtri, normal_quantile
+from repro.sched.straggler import cached_z, ndtri, normal_quantile
 
 
 def quantile_z(q: float) -> float:
-    """z-score of quantile q (shared ndtri; q=0.5 -> 0.0 exactly)."""
-    return float(ndtri(q))
+    """z-score of quantile q (shared ndtri; q=0.5 -> 0.0 exactly).
+    Memoized — planning rounds hit the same handful of quantiles."""
+    return cached_z(float(q))
 
 
 @dataclass(frozen=True)
@@ -50,14 +51,25 @@ class RuntimeDist:
 
 @dataclass(frozen=True)
 class TaskDistribution:
-    """One matrix row: a task's predictive N(mean, std) on every node."""
+    """One matrix row: a task's predictive N(mean, std) on every node.
+
+    `node_index` is the name -> column map; rows sliced off one matrix
+    share the matrix's dict (built once per round, not once per row).  A
+    row constructed without it builds its own lazily on first lookup —
+    either way `on()` is a dict hit, not an O(N) `tuple.index` scan (the
+    speculation heartbeat calls it per running task per check)."""
     uid: str
     node_names: Tuple[str, ...]
     means: np.ndarray              # (N,) float64
     stds: np.ndarray               # (N,) float64
+    node_index: Optional[Dict[str, int]] = None
 
     def on(self, node: str) -> Tuple[float, float]:
-        i = self.node_names.index(node)
+        ix = self.node_index
+        if ix is None:
+            ix = {n: j for j, n in enumerate(self.node_names)}
+            object.__setattr__(self, "node_index", ix)   # frozen: memoize
+        i = ix[node]
         return float(self.means[i]), float(self.stds[i])
 
     def dist(self, node: str) -> RuntimeDist:
@@ -107,7 +119,8 @@ class PredictionMatrix:
     def row(self, uid: str) -> TaskDistribution:
         i = self.uid_index[uid]
         return TaskDistribution(uid=uid, node_names=self.node_names,
-                                means=self.means[i], stds=self.stds[i])
+                                means=self.means[i], stds=self.stds[i],
+                                node_index=self.node_index)
 
     def costs(self, uids: Sequence[str], node_names: Sequence[str],
               quantile: Optional[float] = None) -> np.ndarray:

@@ -14,7 +14,7 @@ bookings, and the speculation threshold all call it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -82,11 +82,26 @@ def ndtri(p) -> np.ndarray:
     return np.where(central, z_c, z_t)
 
 
-def normal_quantile(mean, std, q: float = 0.95):
+# scalar z-scores are asked for on every planning round / speculation
+# heartbeat, always at a handful of distinct q values — memoize them (the
+# cached value is exactly float(ndtri(q)), so cached and uncached callers
+# stay bit-identical)
+_Z_CACHE: Dict[float, float] = {}
+
+
+def cached_z(q: float) -> float:
+    """float(ndtri(q)) memoized per scalar quantile."""
+    z = _Z_CACHE.get(q)
+    if z is None:
+        z = _Z_CACHE[q] = float(ndtri(q))
+    return z
+
+
+def normal_quantile(mean, std, q=0.95):
     """N(mean, std) inverse CDF; vectorized over mean/std/q.  Returns a
     float for scalar inputs, an ndarray otherwise."""
-    out = np.asarray(mean, np.float64) + np.asarray(std, np.float64) \
-        * ndtri(q)
+    z = cached_z(float(q)) if isinstance(q, (int, float)) else ndtri(q)
+    out = np.asarray(mean, np.float64) + np.asarray(std, np.float64) * z
     return float(out) if out.ndim == 0 else out
 
 

@@ -10,7 +10,7 @@ what each caller would have computed alone.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -75,6 +75,18 @@ def scale(mean: np.ndarray, std: np.ndarray, factors: np.ndarray
     may be per-query (Q,) or a (T, N) matrix against (T, 1) predictions)."""
     f = np.asarray(factors, np.float64)
     return np.maximum(mean, 1e-3) * f, std * f
+
+
+def cost_matrix(mean_s: np.ndarray, std_s: np.ndarray,
+                z: Optional[float]) -> np.ndarray:
+    """Quantile cost view over an already-scaled (T, N) mean/std pair:
+    `mean + z * std` at the requested band, or the mean itself when no
+    quantile is asked for.  Matches `plane.PredictionMatrix.costs`
+    term-for-term (same expressions, no reassociation) so a resident
+    plane serving this view schedules bitwise like the gather path."""
+    if z is None:
+        return np.array(mean_s, np.float64, copy=True)
+    return mean_s + z * std_s
 
 
 def finalize(mean: np.ndarray, std: np.ndarray, factors: np.ndarray,

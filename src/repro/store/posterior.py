@@ -156,14 +156,21 @@ class StoreSnapshot:
     live index would silently resolve such a key to the evicted tenant's
     old row (`n_rows` still guards keys appended past the snapshot)."""
 
-    __slots__ = ("_blocks", "_rows", "_n_rows", "_block_size", "generation")
+    __slots__ = ("_blocks", "_rows", "_n_rows", "_block_size", "generation",
+                 "_block_gen")
 
-    def __init__(self, blocks, rows, n_rows, block_size, generation):
+    def __init__(self, blocks, rows, n_rows, block_size, generation,
+                 block_gen=None):
         self._blocks = tuple(blocks)
         self._rows = rows
         self._n_rows = n_rows
         self._block_size = block_size
         self.generation = generation
+        # block id -> generation of its last rewrite, captured with the
+        # snapshot: the basis of dirty-row detection for device-resident
+        # consumers (sched.fused).  Optional for hand-built snapshots —
+        # a missing map degrades to "everything may have changed".
+        self._block_gen = dict(block_gen) if block_gen is not None else None
 
     def __contains__(self, key) -> bool:
         row = self._rows.get(str(key))
@@ -195,6 +202,28 @@ class StoreSnapshot:
         """One row's leaves (copies), as a predict_blr-compatible dict."""
         g = self.gather([key])
         return {leaf: v[0] for leaf, v in g.items()}
+
+    def rows_changed_since(self, keys: Sequence, generation: int
+                           ) -> np.ndarray:
+        """(len(keys),) bool mask: True where a key's backing block was
+        rewritten after `generation` — the dirty-row feed for consumers
+        keeping gathered rows resident across snapshots (a superset at
+        block granularity: a neighbor row's write marks the whole block;
+        correctness needs no finer grain since re-predicting a clean row
+        is bit-identical).  A key unknown to this snapshot, or a snapshot
+        without generation tags, is conservatively dirty."""
+        out = np.empty(len(keys), bool)
+        for i, k in enumerate(keys):
+            row = self._rows.get(str(k))
+            if row is None or row >= self._n_rows:
+                out[i] = True
+                continue
+            if self._block_gen is None:
+                out[i] = True
+                continue
+            g = self._block_gen.get(row // self._block_size)
+            out[i] = g is None or g > generation
+        return out
 
 
 class TenantBinding:
@@ -368,15 +397,39 @@ class TenantBinding:
         return np.asarray([self.base_factor(q.task, q.node)
                            * corr.get(q.node, 1.0) for q in queries])
 
+    @property
+    def factor_version(self) -> Optional[int]:
+        """Base-predictor fit version the static-factor cache is scoped to
+        (moves on refit).  Device-resident consumers key their cached
+        base-factor matrices on it, so a refit invalidates them exactly
+        when it invalidates this cache."""
+        return self._factor_version
+
+    def node_corrections(self, nodes: Sequence[Optional[str]]
+                         ) -> Dict[Optional[str], float]:
+        """node -> streaming correction factor (1.0 when the predictor has
+        none) — the per-round multiplicative term composed onto
+        `base_factor` by `factors`/`factor_matrix`."""
+        corr_fn = getattr(self.predictor, "node_correction", None)
+        if corr_fn is None:
+            return {n: 1.0 for n in set(nodes)}
+        return {n: corr_fn(n) for n in set(nodes)}
+
+    def base_factor_matrix(self, tasks: Sequence[str],
+                           nodes: Sequence[Optional[str]]) -> np.ndarray:
+        """(T, N) static-factor matrix (no streaming corrections) — the
+        slowly-moving part of `factor_matrix`, cacheable against
+        `factor_version`."""
+        return np.asarray([[self.base_factor(t, n) for n in nodes]
+                           for t in tasks])
+
     def factor_matrix(self, tasks: Sequence[str],
                       nodes: Sequence[Optional[str]]) -> np.ndarray:
         """(T, N) multiplicative factor matrix for the decision plane: the
         same static x streaming product `factors` computes per query, laid
         out for a tasks x nodes prediction matrix (None column -> local,
         factor 1)."""
-        corr_fn = getattr(self.predictor, "node_correction", None)
-        corr = ({n: corr_fn(n) for n in set(nodes)} if corr_fn
-                else {n: 1.0 for n in set(nodes)})
+        corr = self.node_corrections(nodes)
         return np.asarray([[self.base_factor(t, n) * corr.get(n, 1.0)
                             for n in nodes] for t in tasks])
 
@@ -551,7 +604,7 @@ class PosteriorStore:
             if self._snap is None:
                 self._snap = StoreSnapshot(self._blocks, dict(self._rows),
                                            self._next_row, self.block_size,
-                                           self.generation)
+                                           self.generation, self._block_gen)
             return self._snap
 
     def get(self, key) -> Dict[str, np.ndarray]:
