@@ -22,8 +22,9 @@ def main(argv=None):
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (carbon, cost, distributed_serving, fused_plane,
-                            online_adaptation, prediction_error,
-                            profiling_time, refresh_overhead, replan_latency,
+                            ingest_throughput, online_adaptation,
+                            prediction_error, profiling_time,
+                            refresh_overhead, replan_latency,
                             roofline_report, scheduling_makespan,
                             service_throughput, straggler_mitigation)
     jobs = {
@@ -38,6 +39,8 @@ def main(argv=None):
         "straggler_mitigation": lambda: straggler_mitigation.run(),
         "replan_latency": lambda: replan_latency.run(),
         "fused_plane": lambda: fused_plane.run(),
+        "ingest_throughput": lambda: ingest_throughput.run(
+            n_records=2000 if not args.full else 8000),
         "refresh_overhead": lambda: refresh_overhead.run(),
         "roofline": lambda: roofline_report.run(),
         "distributed_serving": lambda: distributed_serving.run()

@@ -180,23 +180,231 @@ def nig_update(nig: dict, x_new: float, y_new: float) -> dict:
         mu'   = V' (prec mu + phi y)
         a'    = a + 1/2
         b'    = b + (y^2 + mu^T prec mu - mu'^T prec' mu') / 2
+
+    All 2x2 algebra is unrolled to explicit component arithmetic — the
+    SAME expressions `_nig_fold_np` evaluates on (T,) vectors — so the
+    scalar chain and the batched fold perform identical float64 IEEE op
+    sequences per task and agree bit-for-bit (BLAS matvec/dot kernels do
+    not guarantee that: their FMA contractions differ from elementwise
+    numpy in the last ulp).
     """
     xs = (float(x_new) - nig["x_mu"]) / nig["x_sd"]
     ys = (float(y_new) - nig["y_mu"]) / nig["y_sd"]
-    phi = np.array([1.0, xs], np.float64)
-
     prec, v, mu = nig["prec"], nig["v"], nig["mu"]
-    vp = v @ phi
-    denom = 1.0 + phi @ vp
-    v_new = v - np.outer(vp, vp) / denom
-    prec_new = prec + np.outer(phi, phi)
-    mu_new = v_new @ (prec @ mu + phi * ys)
-    b_new = nig["b"] + 0.5 * (ys * ys + mu @ prec @ mu
-                              - mu_new @ prec_new @ mu_new)
+    mu1, mu2 = mu[0], mu[1]
+    v11, v12, v22 = v[0, 0], v[0, 1], v[1, 1]
+    p11, p12, p22 = prec[0, 0], prec[0, 1], prec[1, 1]
+
+    (nmu1, nmu2, nv11, nv12, nv22, np11, np12, np22, nb) = _nig_step(
+        mu1, mu2, v11, v12, v22, p11, p12, p22, nig["b"], xs, ys)
+
     out = dict(nig)
-    out.update(mu=mu_new, v=v_new, prec=prec_new,
-               a=nig["a"] + 0.5, b=max(b_new, 1e-12),
+    out.update(mu=np.array([nmu1, nmu2], np.float64),
+               v=np.array([[nv11, nv12], [nv12, nv22]], np.float64),
+               prec=np.array([[np11, np12], [np12, np22]], np.float64),
+               a=nig["a"] + 0.5, b=nb if nb > 1e-12 else 1e-12,
                n_obs=nig["n_obs"] + 1.0)
+    return out
+
+
+def _nig_step(mu1, mu2, v11, v12, v22, p11, p12, p22, b, xs, ys):
+    """One Sherman-Morrison rank-1 NIG update in explicit 2x2 component
+    form, on standardized (xs, ys).  Polymorphic over scalars and (T,)
+    float64 vectors: numpy elementwise ufuncs are IEEE-deterministic per
+    element, so evaluating these expressions lane-wise over T tasks is
+    bit-identical to evaluating them one task at a time — the property
+    `nig_update_batch` is built on."""
+    # vp = V phi with phi = (1, xs);  denom = 1 + phi^T V phi
+    vp1 = v11 + v12 * xs
+    vp2 = v12 + v22 * xs
+    denom = 1.0 + (vp1 + xs * vp2)
+    nv11 = v11 - vp1 * vp1 / denom
+    nv12 = v12 - vp1 * vp2 / denom
+    nv22 = v22 - vp2 * vp2 / denom
+    np11 = p11 + 1.0
+    np12 = p12 + xs
+    np22 = p22 + xs * xs
+    r1 = (p11 * mu1 + p12 * mu2) + ys            # prec mu + phi y
+    r2 = (p12 * mu1 + p22 * mu2) + xs * ys
+    nmu1 = nv11 * r1 + nv12 * r2
+    nmu2 = nv12 * r1 + nv22 * r2
+    qo = (mu1 * p11 + mu2 * p12) * mu1 + (mu1 * p12 + mu2 * p22) * mu2
+    qn = (nmu1 * np11 + nmu2 * np12) * nmu1 \
+        + (nmu1 * np12 + nmu2 * np22) * nmu2
+    # callers floor nb at 1e-12 (np.maximum for vectors, a branch for
+    # scalars — identical values, and the scalar chain stays free of
+    # numpy per-op dispatch)
+    nb = b + 0.5 * (ys * ys + qo - qn)
+    return nmu1, nmu2, nv11, nv12, nv22, np11, np12, np22, nb
+
+
+def _nig_fold_np(mu, v, prec, a, b, n_obs, xs, ys, m):
+    """Vectorized masked fold: apply K standardized observations to T NIG
+    states simultaneously, one scan step per observation column.
+
+    Bit-identical to chaining `nig_update` per task: both evaluate the
+    SAME `_nig_step` component expressions, and numpy float64 elementwise
+    ufuncs are IEEE-deterministic per lane — vectorizing over tasks cannot
+    reassociate anything (every contraction in the 2x2 algebra is written
+    out; there are no BLAS dispatches whose FMA behavior could differ).
+    Masked lanes keep their old state via `where` selection (denominators
+    are >= 1 and b is floored, so dead lanes never produce NaNs that
+    could leak through the select).
+    """
+    mu1, mu2 = mu[:, 0], mu[:, 1]
+    v11, v12, v22 = v[:, 0, 0], v[:, 0, 1], v[:, 1, 1]
+    p11, p12, p22 = prec[:, 0, 0], prec[:, 0, 1], prec[:, 1, 1]
+    for k in range(xs.shape[1]):
+        xk, yk, mk = xs[:, k], ys[:, k], m[:, k] > 0.0
+        (nmu1, nmu2, nv11, nv12, nv22, np11, np12, np22, nb) = _nig_step(
+            mu1, mu2, v11, v12, v22, p11, p12, p22, b, xk, yk)
+        nb = np.maximum(nb, 1e-12)
+        mu1 = np.where(mk, nmu1, mu1)
+        mu2 = np.where(mk, nmu2, mu2)
+        v11 = np.where(mk, nv11, v11)
+        v12 = np.where(mk, nv12, v12)
+        v22 = np.where(mk, nv22, v22)
+        p11 = np.where(mk, np11, p11)
+        p12 = np.where(mk, np12, p12)
+        p22 = np.where(mk, np22, p22)
+        b = np.where(mk, nb, b)
+        a = np.where(mk, a + 0.5, a)
+        n_obs = np.where(mk, n_obs + 1.0, n_obs)
+    mu = np.stack([mu1, mu2], axis=1)
+    v = np.stack([np.stack([v11, v12], 1), np.stack([v12, v22], 1)], axis=1)
+    prec = np.stack([np.stack([p11, p12], 1),
+                     np.stack([p12, p22], 1)], axis=1)
+    return mu, v, prec, a, b, n_obs
+
+
+_FOLD_VEC_MIN_TASKS = 64
+"""Below this many tasks the vectorized fold's numpy per-op dispatch
+overhead loses to per-task python-float chains; both are the identical
+IEEE op sequence, so the size dispatch is invisible to digests."""
+
+
+def _nig_chain_py(nig: dict, xrow, yrow) -> dict:
+    """Per-task scalar chain on python floats: the same `_nig_step`
+    component expressions `nig_update` evaluates (python float and numpy
+    float64 scalar arithmetic share the hardware double ops, so results
+    are bit-identical), minus numpy's per-op scalar dispatch — the fast
+    form for narrow folds."""
+    if not len(xrow):
+        return dict(nig)
+    x_mu, x_sd = float(nig["x_mu"]), float(nig["x_sd"])
+    y_mu, y_sd = float(nig["y_mu"]), float(nig["y_sd"])
+    mu, v, prec = nig["mu"], nig["v"], nig["prec"]
+    mu1, mu2 = float(mu[0]), float(mu[1])
+    v11, v12, v22 = float(v[0, 0]), float(v[0, 1]), float(v[1, 1])
+    p11, p12, p22 = float(prec[0, 0]), float(prec[0, 1]), float(prec[1, 1])
+    b = float(nig["b"])
+    for x, y in zip(xrow, yrow):
+        sx = (float(x) - x_mu) / x_sd
+        sy = (float(y) - y_mu) / y_sd
+        (mu1, mu2, v11, v12, v22, p11, p12, p22, b) = _nig_step(
+            mu1, mu2, v11, v12, v22, p11, p12, p22, b, sx, sy)
+        b = b if b > 1e-12 else 1e-12
+    k = len(xrow)
+    out = dict(nig)
+    out.update(mu=np.array([mu1, mu2], np.float64),
+               v=np.array([[v11, v12], [v12, v22]], np.float64),
+               prec=np.array([[p11, p12], [p12, p22]], np.float64),
+               a=nig["a"] + 0.5 * k, b=b,
+               n_obs=nig["n_obs"] + float(k))
+    return out
+
+
+def nig_update_batch(nigs, xs, ys, impl: str = "numpy"):
+    """Fold grouped observations into many streaming NIG states in ONE
+    dispatch: `nigs` is a list of T states, `xs[i]`/`ys[i]` the (ragged)
+    observation sequence for state i, in arrival order.  Returns T updated
+    states; the inputs are not mutated.
+
+    impl='numpy' (default) is the float64 CPU path the ingest plane uses —
+    bit-identical to `[chain of nig_update]` per task (the scalar chain is
+    the exactness oracle).  It size-dispatches between two forms that run
+    the identical IEEE op sequence: 'chain' (per-task python-float chains;
+    fastest when T is small, where numpy per-op overhead dominates) and
+    'vec' (the masked (T, K) vectorized fold `_nig_fold_np`; fastest for
+    wide cross-task batches).  Pass 'chain'/'vec' to force a form.
+    impl='scan' runs the vmapped `lax.scan` form and 'pallas'/'interpret'
+    the fused kernel (kernels.bayes_fit.nig_fold) — the device-resident
+    float32 forms for TPU posterior banks, parity within kernel tolerance,
+    NOT for the float64 streaming states that feed digests.
+    """
+    if len(xs) != len(nigs) or len(ys) != len(nigs):
+        raise ValueError(f"need one observation row per state: "
+                         f"{len(nigs)} states, {len(xs)}/{len(ys)} rows")
+    if not nigs:
+        return []
+    t = len(nigs)
+    kmax = 0
+    for i, (xi, yi) in enumerate(zip(xs, ys)):
+        if len(xi) != len(yi):
+            raise ValueError(f"row {i}: len(x)={len(xi)} != len(y)={len(yi)}")
+        kmax = max(kmax, len(xi))
+    if kmax == 0:
+        return [dict(n) for n in nigs]
+    if impl == "numpy":
+        impl = "chain" if t < _FOLD_VEC_MIN_TASKS else "vec"
+    if impl == "chain":
+        return [_nig_chain_py(n, xr, yr)
+                for n, xr, yr in zip(nigs, xs, ys)]
+
+    x = np.zeros((t, kmax), np.float64)
+    y = np.zeros((t, kmax), np.float64)
+    m = np.zeros((t, kmax), np.float64)
+    for i, (xi, yi) in enumerate(zip(xs, ys)):
+        k = len(xi)
+        x[i, :k] = np.asarray(xi, np.float64)
+        y[i, :k] = np.asarray(yi, np.float64)
+        m[i, :k] = 1.0
+    stats = np.array([[n["x_mu"], n["x_sd"], n["y_mu"], n["y_sd"]]
+                      for n in nigs], np.float64)
+    # standardize exactly as the scalar update does, per task
+    sx = (x - stats[:, 0:1]) / stats[:, 1:2]
+    sy = (y - stats[:, 2:3]) / stats[:, 3:4]
+    mu = np.stack([np.asarray(n["mu"], np.float64) for n in nigs])
+    v = np.stack([np.asarray(n["v"], np.float64) for n in nigs])
+    prec = np.stack([np.asarray(n["prec"], np.float64) for n in nigs])
+    a = np.array([n["a"] for n in nigs], np.float64)
+    b = np.array([n["b"] for n in nigs], np.float64)
+    n_obs = np.array([n["n_obs"] for n in nigs], np.float64)
+
+    if impl == "vec":
+        mu, v, prec, a, b, n_obs = _nig_fold_np(mu, v, prec, a, b, n_obs,
+                                                sx, sy, m)
+    elif impl in ("scan", "pallas", "interpret", "auto"):
+        from repro.kernels import bayes_fit as _kbf
+        if impl == "scan":
+            fmu, fv, fprec, fb = _kbf.nig_fold_scan(
+                sx, sy, m, mu, v, prec, b)
+        else:
+            fmu, fv, fprec, fb = _kbf.nig_fold(
+                sx, sy, m, mu, v, prec, b,
+                interpret=(impl == "interpret"))
+        counts = m.sum(axis=1)
+        mu = np.asarray(fmu, np.float64)
+        v = np.asarray(fv, np.float64)
+        prec = np.asarray(fprec, np.float64)
+        b = np.asarray(fb, np.float64)
+        a = a + 0.5 * counts
+        n_obs = n_obs + counts
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+
+    counts = m.sum(axis=1)
+    out = []
+    for i, nig in enumerate(nigs):
+        o = dict(nig)
+        if counts[i]:
+            o.update(mu=mu[i], v=v[i], prec=prec[i],
+                     a=a[i], b=b[i], n_obs=n_obs[i])
+        # rows with no observations pass through VERBATIM: restacking
+        # them would symmetrize v/prec ([1,0] := [0,1]) and a fitted
+        # input matrix can be asymmetric in the last ulp — the scalar
+        # chain (zero updates) leaves those bytes untouched
+        out.append(o)
     return out
 
 

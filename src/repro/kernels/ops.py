@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bayes_fit import bayes_fit as _bayes_fit_pallas
 from repro.kernels.bayes_fit import bayes_predict as _bayes_predict_pallas
+from repro.kernels.bayes_fit import nig_fold as _nig_fold_pallas
+from repro.kernels.bayes_fit import nig_fold_scan as _nig_fold_scan
 from repro.kernels.decision_plane import fused_cost as _fused_cost_pallas
 from repro.kernels.decision_plane import fused_cost_ref as _fused_cost_ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -49,6 +51,20 @@ def bayes_fit(x, y, mask, *, impl: str = "auto"):
     if impl == "interpret":
         return _bayes_fit_pallas(x, y, mask, interpret=True)
     return ref.bayes_fit_ref(x, y, mask)
+
+
+def nig_fold(xs, ys, mask, mu, v, prec, b, *, impl: str = "auto"):
+    """Batched streaming-update fold (the ingest-plane device form):
+    (T, K) standardized masked observations folded into T NIG states in
+    one dispatch.  impl: auto | pallas | interpret | ref ('ref' is the
+    vmapped lax.scan form).  The EXACT float64 ingest path lives in
+    `core.bayes.nig_update_batch(impl='numpy')` — this float32 entry point
+    is for device-resident posterior banks, not digest-bearing state."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _nig_fold_pallas(xs, ys, mask, mu, v, prec, b)
+    if impl == "interpret":
+        return _nig_fold_pallas(xs, ys, mask, mu, v, prec, b, interpret=True)
+    return _nig_fold_scan(xs, ys, mask, mu, v, prec, b)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

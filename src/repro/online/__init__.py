@@ -11,7 +11,8 @@ dispatch), `rescheduler` drives `workflow.simulator.execute_adaptive`.
 Multi-tenant coalescing lives in `repro.store.frontend`.
 """
 from repro.online.events import TaskCompletion, PredictionQuery  # noqa: F401
-from repro.online.predictor import OnlinePredictor               # noqa: F401
+from repro.online.predictor import (IngestStats,                 # noqa: F401
+                                    OnlinePredictor)
 from repro.online.service import PredictionService               # noqa: F401
 from repro.online.maintenance import (FleetRefresher,            # noqa: F401
                                       RefreshPolicy, RefreshReport)

@@ -26,7 +26,7 @@ import math
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Mapping, Optional, Tuple
+from typing import (Deque, Dict, List, Mapping, Optional, Sequence, Tuple)
 
 import numpy as np
 
@@ -92,6 +92,39 @@ class _NodeStats:
                              FACTOR_CLIP))
 
 
+@dataclass
+class IngestStats:
+    """Write-path telemetry, the ingest sibling of the decision plane's
+    PlaneStats: how observations entered the posteriors, and at what
+    batching leverage.  Predictor-level counters here; the serving shard
+    aggregates them across bindings and adds its own drain/flush/
+    generation counters for the `health` RPC."""
+    batches: int = 0               # observe_many calls (or shard drains)
+    records: int = 0               # completions ingested (incl. dropped)
+    folded: int = 0                # records absorbed by the vectorized fold
+    fold_dispatches: int = 0       # nig_update_batch dispatches issued
+    scalar: int = 0                # records that took the per-record path
+    lock_acquisitions: int = 0     # state-lock acquisitions for ingest
+    flushes: int = 0               # oplog commits (group commit: 1/batch)
+    generations_published: int = 0  # store COW generations from ingest
+
+    def as_dict(self) -> dict:
+        return {"batches": self.batches, "records": self.records,
+                "folded": self.folded,
+                "fold_dispatches": self.fold_dispatches,
+                "scalar": self.scalar,
+                "lock_acquisitions": self.lock_acquisitions,
+                "flushes": self.flushes,
+                "generations_published": self.generations_published}
+
+    def merge(self, other: "IngestStats") -> "IngestStats":
+        for f in ("batches", "records", "folded", "fold_dispatches",
+                  "scalar", "lock_acquisitions", "flushes",
+                  "generations_published"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+
 def _ring() -> Deque[float]:
     return deque(maxlen=MAX_BUFFER)
 
@@ -144,6 +177,7 @@ class OnlinePredictor:
         # seq guard in apply_refresh is only airtight if the check and the
         # swap cannot interleave with a concurrent observe()
         self._state_lock = threading.Lock()
+        self.ingest = IngestStats()           # write-path telemetry
 
     # ---- prediction ---------------------------------------------------------
     @property
@@ -224,10 +258,99 @@ class OnlinePredictor:
         an applied observation, only re-apply a logged one that did not
         land (and replay from the checkpoint watermark is idempotent)."""
         with self._state_lock:
+            self.ingest.lock_acquisitions += 1
+            self.ingest.records += 1
+            self.ingest.scalar += 1
             hook = getattr(self, "observe_log", None)
             if hook is not None:
                 hook(comp)
             self._observe(comp)
+
+    def observe_many(self, comps: Sequence[TaskCompletion]) -> int:
+        """Fold a batch of completions under ONE state-lock acquisition.
+
+        Exactness contract: the resulting state (and therefore
+        `serve.state_digest`) is bit-identical to calling `observe(comp)`
+        for each completion in order — the scalar chain is the oracle.
+        The batch is regrouped per task; a task whose records are all
+        local regression updates rides ONE `nig_update_batch` float64 fold
+        dispatch (with grouped ring-buffer appends and a single shared
+        change-feed publication for the whole fold group), while records
+        that touch order-sensitive side state — remote completions feeding
+        node-factor recalibration, median-fallback/promotion tasks,
+        unknown tasks — replay through the exact per-record path in
+        original arrival order.  The fold is safe to reorder against them
+        because a fold-eligible task's NIG state is, by construction,
+        neither read nor written by any other record in the batch.
+
+        Write-ahead order is preserved: `observe_log_many` (or the scalar
+        `observe_log` per record) runs under the lock BEFORE any state
+        moves, so the group commit is durable before it can mutate state.
+        Returns the number of records that advanced the predictor version
+        (posterior or node-correction state moved; exactly the version
+        delta the scalar chain would produce).
+        """
+        comps = list(comps)
+        if not comps:
+            return 0
+        with self._state_lock:
+            self.ingest.lock_acquisitions += 1
+            self.ingest.batches += 1
+            self.ingest.records += len(comps)
+            hook_many = getattr(self, "observe_log_many", None)
+            if hook_many is not None:
+                hook_many(comps)
+            else:
+                hook = getattr(self, "observe_log", None)
+                if hook is not None:
+                    for c in comps:
+                        hook(c)
+            return self._observe_many(comps)
+
+    def _observe_many(self, comps: List[TaskCompletion]) -> int:
+        local_name = getattr(self.base.local_bench, "name", "local")
+        local_names = (None, "", "local", local_name)
+        per_task: Dict[str, List[TaskCompletion]] = {}
+        for c in comps:
+            if c.task in self.tasks:
+                per_task.setdefault(c.task, []).append(c)
+        fold_tasks: List[str] = []
+        scalar_tasks = set()
+        for task, recs in per_task.items():
+            if self.tasks[task].nig is not None \
+                    and all(c.node in local_names for c in recs):
+                fold_tasks.append(task)
+            else:
+                scalar_tasks.add(task)
+
+        applied = 0
+        if fold_tasks:
+            new_nigs = bayes.nig_update_batch(
+                [self.tasks[t].nig for t in fold_tasks],
+                [[c.input_gb for c in per_task[t]] for t in fold_tasks],
+                [[c.runtime_s for c in per_task[t]] for t in fold_tasks])
+            self._change_seq += 1           # ONE publication for the fold
+            seq = self._change_seq
+            for task, nig in zip(fold_tasks, new_nigs):
+                st = self.tasks[task]
+                st.nig = nig
+                for c in per_task[task]:    # grouped ring-buffer appends
+                    self._buffer(st, c.input_gb, c.runtime_s)
+                st.since_refresh += len(per_task[task])
+                self._task_changes[task] = seq
+                applied += len(per_task[task])
+            self.version += applied         # same per-record bump as the
+            self.ingest.folded += applied   # scalar chain (digest parity)
+            self.ingest.fold_dispatches += 1
+
+        if scalar_tasks:
+            v0 = self.version
+            for c in comps:                 # original arrival order: node
+                if c.task in scalar_tasks:  # stats are order-sensitive
+                    self._observe(c)
+                    self.ingest.scalar += 1
+            applied += self.version - v0
+        return applied
 
     def _observe(self, comp: TaskCompletion) -> None:
         if comp.task not in self.tasks:

@@ -21,6 +21,17 @@ Failure handling, per call:
   * non-idempotent `observe`: NEVER resent once the frame hit the
     socket — an ack may have been lost, not the observation; only
     connect/pre-send failures retry.  Idempotent reads retry freely.
+
+The write path mirrors the read path's coalescing: `observe_many`
+groups completions by owning shard and sends ONE `observe_many` frame
+per shard (all shards in flight concurrently), and an optional
+`observe_window_s` turns scalar `observe` calls into parked futures a
+background drain batches through `observe_many` — N workflow engines
+reporting completions cost #shards RPCs per window, not N.  Retrying a
+displaced `observe_many` group after `wrong_shard` is safe despite the
+no-resend rule: the shard validates the WHOLE batch before parking
+anything, so a `wrong_shard` (or `queue_full`) reply promises nothing
+was applied.
 """
 from __future__ import annotations
 
@@ -154,12 +165,18 @@ class _ShardConn:
 
 class ServingClient:
     def __init__(self, shard_map: ShardMap,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 observe_window_s: Optional[float] = None):
         self.map = shard_map
         self.retry = retry or RetryPolicy()
         self._conns: Dict[str, _ShardConn] = {}
         self._conn_locks: Dict[str, asyncio.Lock] = {}
         self._orphan_closes: List[asyncio.Future] = []
+        # observe coalescing: scalar observes park here for a window,
+        # then ship as per-shard observe_many frames (None: send-through)
+        self.observe_window_s = observe_window_s
+        self._obs_buf: List[tuple] = []
+        self._obs_task: Optional[asyncio.Future] = None
 
     # ---- map / connection management ----------------------------------------
     def set_map(self, m: ShardMap) -> None:
@@ -306,13 +323,83 @@ class ServingClient:
 
     async def observe(self, comp, tenant: str, workflow: str) -> int:
         """Fold a completion into its shard; returns the durable oplog
-        ack sequence.  Not resent once on the wire (see module doc)."""
+        ack sequence.  Not resent once on the wire (see module doc).
+        With `observe_window_s` set, parks for the window and rides a
+        coalesced `observe_many` frame instead of a solo RPC."""
+        if self.observe_window_s is not None:
+            fut: asyncio.Future = asyncio.get_running_loop().create_future()
+            self._obs_buf.append((comp, tenant, workflow, fut))
+            if self._obs_task is None or self._obs_task.done():
+                self._obs_task = asyncio.ensure_future(self._observe_drain())
+            return await fut
         r = await self._call("observe",
                              {"t": tenant, "w": workflow,
                               "c": dataclasses.asdict(comp)},
                              tenant=tenant, workflow=workflow,
                              idempotent=False)
         return int(r["seq"])
+
+    async def _observe_drain(self) -> None:
+        """Flush the observe window: everything parked goes out as one
+        coalesced `observe_many` round.  A round-level failure fails
+        every parked future — callers keep per-record error visibility."""
+        await asyncio.sleep(self.observe_window_s or 0.0)
+        parked, self._obs_buf = self._obs_buf, []
+        if not parked:
+            return
+        try:
+            seqs = await self.observe_many(
+                [(c, t, w) for c, t, w, _ in parked])
+        except BaseException as e:     # noqa: BLE001 — parked callers
+            for *_, fut in parked:     # must see the round's failure
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        for (*_, fut), seq in zip(parked, seqs):
+            if not fut.done():
+                fut.set_result(seq)
+
+    async def observe_many(self, batch: Sequence[Tuple[object, str, str]]
+                           ) -> List[int]:
+        """[(completion, tenant, workflow), ...] -> per-record oplog ack
+        seqs.  Coalesced: one `observe_many` RPC per owning shard, all
+        shards in flight concurrently.  Re-groups batches displaced by a
+        map change mid-round — safe under the no-resend rule because the
+        shard rejects a whole frame (`wrong_shard`) before applying any
+        record of it."""
+        out: List[Optional[int]] = [None] * len(batch)
+        remaining = list(range(len(batch)))
+        last: Optional[BaseException] = None
+        for _ in range(self.retry.max_attempts):
+            if not remaining:
+                break
+            groups: Dict[str, List[int]] = {}
+            for i in remaining:
+                _, t, w = batch[i]
+                groups.setdefault(
+                    self.map.shard_for(namespace_str(t, w)), []).append(i)
+            calls = [self._call("observe_many",
+                                {"b": [{"t": batch[i][1],
+                                        "w": batch[i][2],
+                                        "c": dataclasses.asdict(batch[i][0])}
+                                       for i in idxs]},
+                                shard_id=sid, idempotent=False)
+                     for sid, idxs in groups.items()]
+            results = await asyncio.gather(*calls, return_exceptions=True)
+            next_remaining: List[int] = []
+            for (sid, idxs), res in zip(groups.items(), results):
+                if isinstance(res, WrongShardError):
+                    next_remaining.extend(idxs)   # map moved: re-group
+                    last = res
+                elif isinstance(res, BaseException):
+                    raise res
+                else:
+                    for i, seq in zip(idxs, res["seqs"]):
+                        out[i] = int(seq)
+            remaining = next_remaining
+        if remaining:
+            raise last or RuntimeError("observe_many failed to converge")
+        return out    # type: ignore[return-value]
 
     async def digest(self, tenant: str, workflow: str) -> str:
         r = await self._call("digest", {"t": tenant, "w": workflow},
@@ -337,6 +424,13 @@ class ServingClient:
             for sid in self.map.shard_ids()])
 
     async def close(self) -> None:
+        if self._obs_task is not None and not self._obs_task.done():
+            # let a pending observe window flush before tearing down
+            # connections (parked callers get real acks, not resets)
+            try:
+                await self._obs_task
+            except Exception:          # noqa: BLE001 — drain reported to
+                pass                   # its own parked futures already
         for conn in self._conns.values():
             await conn.close()
         self._conns.clear()

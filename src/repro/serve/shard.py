@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.online.events import TaskCompletion
 from repro.online.maintenance import FleetRefresher, RefreshPolicy
+from repro.online.predictor import IngestStats
 from repro.serve.failover import OpLog
 from repro.serve.placement import ShardMap
 from repro.serve.wire import WireError, read_frame, write_frame
@@ -111,6 +112,8 @@ class ShardServer:
                  checkpoint_interval_s: Optional[float] = None,
                  window_s: float = 0.002,
                  max_pending_batches: Optional[int] = 64,
+                 ingest_window_s: float = 0.002,
+                 max_pending_ingest: Optional[int] = 4096,
                  refresh_policy: Optional[RefreshPolicy] = None,
                  refresh_interval_s: Optional[float] = None,
                  impl: str = "auto", z: float = 1.96):
@@ -133,6 +136,21 @@ class ShardServer:
             refresher=self.refresher,
             refresh_interval_s=refresh_interval_s or 1.0)
         self.replayed = 0            # oplog records replayed at boot
+        # ---- ingest micro-batching (the write-path batch window) ----
+        # observe/observe_many records park here for `ingest_window_s`;
+        # one drain folds everything pending — per namespace, one
+        # observe_many (one state-lock acquisition + one oplog group
+        # commit), then ONE sync_bindings publish (one COW generation)
+        # for the whole cross-tenant batch.
+        if max_pending_ingest is not None and max_pending_ingest < 1:
+            raise ValueError("max_pending_ingest must be >= 1")
+        self.ingest_window_s = ingest_window_s
+        self.max_pending_ingest = max_pending_ingest
+        self.ingest = IngestStats()  # shard-level drain/flush telemetry
+        self.last_ingest_error: Optional[BaseException] = None
+        self._ingest_pending: List[tuple] = []
+        self._ingest_task: Optional[asyncio.Task] = None
+        self._batch_seqs: Optional[List[int]] = None  # set by hook_many
         self._server: Optional[asyncio.base_events.Server] = None
         self._checkpoint_task: Optional[asyncio.Task] = None
         self._closing = asyncio.Event()
@@ -161,7 +179,19 @@ class ShardServer:
             self.applied_seq = self.oplog.append(
                 {"t": _t, "w": _w, "c": dataclasses.asdict(comp)})
 
+        def hook_many(comps, _t=tenant, _w=workflow) -> None:
+            # group commit: one frame + one flush for the whole batch,
+            # still write-ahead (observe_many calls this under the state
+            # lock before any state moves).  Per-record seqs are parked
+            # for the ingest drain to hand back as acks.
+            seqs = self.oplog.append_many(
+                [{"t": _t, "w": _w, "c": dataclasses.asdict(c)}
+                 for c in comps])
+            self.applied_seq = seqs[-1]
+            self._batch_seqs = seqs
+
         predictor.observe_log = hook
+        predictor.observe_log_many = hook_many
 
     # ---- checkpointing ------------------------------------------------------
     def checkpoint(self) -> dict:
@@ -252,13 +282,92 @@ class ShardServer:
         mean, std = scale(mean[:, None], std[:, None], f)
         return {"mean": mean, "std": std}
 
+    # ---- ingest (write path) ------------------------------------------------
+    def _enqueue_observes(self, records) -> List[asyncio.Future]:
+        """Park validated (tenant, workflow, comp) records in the ingest
+        window.  Capacity is checked before anything parks, so a
+        `queue_full` reply means NO record of the request was accepted —
+        the client can safely retry the whole batch."""
+        if self.max_pending_ingest is not None \
+                and len(self._ingest_pending) + len(records) \
+                > self.max_pending_ingest:
+            raise RpcError(
+                "queue_full",
+                f"{len(self._ingest_pending)} observations already parked "
+                f"(max_pending_ingest={self.max_pending_ingest}); retry "
+                f"after the next ingest drain")
+        loop = asyncio.get_running_loop()
+        futs = [loop.create_future() for _ in records]
+        self._ingest_pending.extend(
+            (t, w, c, f) for (t, w, c), f in zip(records, futs))
+        if self._ingest_task is None or self._ingest_task.done():
+            self._ingest_task = asyncio.ensure_future(self._ingest_drain())
+        return futs
+
+    def _take_batch_seqs(self, n: int) -> List[int]:
+        """Per-record ack seqs of the group commit the last observe_many
+        issued (or the current watermark when the shard runs without an
+        oplog — matching the scalar observe ack)."""
+        seqs, self._batch_seqs = self._batch_seqs, None
+        if seqs is None:
+            return [self.applied_seq] * n
+        return seqs
+
+    async def _ingest_drain(self) -> None:
+        await asyncio.sleep(self.ingest_window_s)
+        pending, self._ingest_pending = self._ingest_pending, []
+        if not pending:
+            return
+        self.ingest.batches += 1
+        self.ingest.records += len(pending)
+        groups: Dict[Tuple[str, str], list] = {}
+        for t, w, comp, fut in pending:       # group per namespace, keep
+            groups.setdefault((t, w), []).append((comp, fut))   # arrival
+        touched = []                                            # order
+        for (t, w), recs in groups.items():
+            try:
+                binding = self._binding(t, w)
+                self._batch_seqs = None
+                binding.predictor.observe_many([c for c, _ in recs])
+                seqs = self._take_batch_seqs(len(recs))
+                touched.append(binding)
+            except BaseException as e:        # noqa: BLE001 — one bad
+                for _, fut in recs:           # namespace fails only its
+                    if not fut.done():        # own callers
+                        fut.set_exception(e)
+                continue
+            for (_, fut), seq in zip(recs, seqs):
+                if not fut.done():
+                    fut.set_result(seq)
+        if touched:
+            # ONE COW generation for the whole cross-tenant drain; a
+            # failed publish leaves the rows due (cursors unmoved) for
+            # the next sync — acks stand, durability already committed
+            try:
+                gen0 = self.store.generation
+                self.store.sync_bindings(touched)
+                self.ingest.generations_published += \
+                    self.store.generation - gen0
+            except Exception as e:            # noqa: BLE001
+                self.last_ingest_error = e
+
     async def _op_observe(self, req) -> dict:
         t, w = req["t"], req["w"]
         self._require_owner(t, w)
-        binding = self._binding(t, w)
+        self._binding(t, w)                   # fail fast before parking
         comp = TaskCompletion(**req["c"])
-        binding.predictor.observe(comp)   # hook logs + applies atomically
-        return {"seq": self.applied_seq}
+        fut = self._enqueue_observes([(t, w, comp)])[0]
+        return {"seq": await fut}
+
+    async def _op_observe_many(self, req) -> dict:
+        records = []
+        for b in req["b"]:                    # validate the WHOLE batch
+            t, w = b["t"], b["w"]             # before anything parks: a
+            self._require_owner(t, w)         # wrong_shard reply promises
+            self._binding(t, w)               # nothing was applied
+            records.append((t, w, TaskCompletion(**b["c"])))
+        futs = self._enqueue_observes(records)
+        return {"seqs": list(await asyncio.gather(*futs))}
 
     async def _op_refresh(self, req) -> dict:
         refresher = self.refresher or FleetRefresher(self.store,
@@ -274,10 +383,28 @@ class ShardServer:
         binding = self._binding(req["t"], req["w"])
         return {"sha256": state_digest(binding.predictor)}
 
+    def ingest_stats(self) -> IngestStats:
+        """Shard-level ingest telemetry: drain/generation counters merged
+        with every bound predictor's fold counters, plus the oplog's
+        group-commit flush count."""
+        agg = IngestStats()
+        agg.merge(self.ingest)
+        for b in self.store.bindings():
+            ps = getattr(b.predictor, "ingest", None)
+            if isinstance(ps, IngestStats):
+                agg.folded += ps.folded
+                agg.fold_dispatches += ps.fold_dispatches
+                agg.scalar += ps.scalar
+                agg.lock_acquisitions += ps.lock_acquisitions
+        if self.oplog is not None:
+            agg.flushes = self.oplog.flush_count
+        return agg
+
     async def _op_health(self, req) -> dict:
         return {"shard_id": self.shard_id, "v": self.map.version,
                 "generation": self.store.generation,
                 "seq": self.applied_seq, "pid": os.getpid(),
+                "ingest": self.ingest_stats().as_dict(),
                 "namespaces": [ns for ns in self.store.namespaces()
                                if not ns.startswith(META_TENANT)]}
 
@@ -356,6 +483,11 @@ class ShardServer:
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
+        if self._ingest_task is not None and not self._ingest_task.done():
+            try:                     # drain parked observes before the
+                await self._ingest_task      # oplog closes under them
+            except Exception:        # noqa: BLE001
+                pass
         if self._checkpoint_task is not None:
             self._checkpoint_task.cancel()
         self.frontend.close()
@@ -397,11 +529,24 @@ def boot_shard(shard_id: str, shard_map: ShardMap, bootstrap: Bootstrap,
 
     replayed = 0
     if oplog_path is not None:
+        # replay rides the batched fold: records group per namespace in
+        # log order (each predictor sees its own records in sequence, and
+        # predictors share no state), so a long tail recovers in one
+        # observe_many per namespace — bit-identical to per-record replay
+        by_ns: Dict[Tuple[str, str], list] = {}
         for rec in OpLog.replay(oplog_path, after_seq=meta.applied_seq):
-            p = preds.get((rec["t"], rec["w"]))
-            if p is not None:
-                p.observe(TaskCompletion(**rec["c"]))
+            by_ns.setdefault((rec["t"], rec["w"]), []).append(rec["c"])
             replayed += 1
+        for (t, w), comps in by_ns.items():
+            p = preds.get((t, w))
+            if p is None:
+                continue
+            batch = [TaskCompletion(**c) for c in comps]
+            if hasattr(p, "observe_many"):
+                p.observe_many(batch)
+            else:
+                for comp in batch:
+                    p.observe(comp)
 
     oplog = OpLog(oplog_path) if oplog_path is not None else None
     server = ShardServer(shard_id, shard_map, store=store, oplog=oplog,

@@ -67,6 +67,25 @@ def fit_stacked(x: np.ndarray, y: np.ndarray, mask: np.ndarray,
     return {k: np.asarray(v, np.float64) for k, v in post.items()}
 
 
+def fold_stacked(nigs, xs, ys, impl: str = "auto"):
+    """Batched streaming-observation fold — the ingest-side sibling of
+    `fit_stacked`: T NIG states + ragged per-task observation rows ->
+    T updated states from ONE fold dispatch (`core.bayes.nig_update_batch`).
+
+    impl='auto' keeps the float64 CPU fold everywhere except on TPU:
+    the ingest plane's exactness contract (bit-identical to the scalar
+    `nig_update` chain, which feeds state digests and failover replay)
+    only holds for the float64 path, so the fused float32 kernel is
+    reserved for device-resident posterior banks."""
+    from repro.core import bayes
+    from repro.kernels import ops
+    if impl in ("pallas", "interpret", "scan") \
+            or (impl == "auto" and ops._on_tpu()):
+        return bayes.nig_update_batch(
+            nigs, xs, ys, impl="pallas" if impl == "auto" else impl)
+    return bayes.nig_update_batch(nigs, xs, ys, impl="numpy")
+
+
 def scale(mean: np.ndarray, std: np.ndarray, factors: np.ndarray
           ) -> Tuple[np.ndarray, np.ndarray]:
     """Extrapolation-factor rescaling (with the mean floor) shared by the

@@ -32,6 +32,7 @@ cache.
 """
 from __future__ import annotations
 
+import contextlib
 import heapq
 import json
 import os
@@ -497,6 +498,65 @@ class PosteriorStore:
         these to find predictors with refresh-due tasks)."""
         with self._lock:
             return list(self._bindings.values())
+
+    def sync_bindings(self, bindings: Optional[Sequence[TenantBinding]]
+                      = None) -> int:
+        """Sync several namespaces' changed rows in ONE copy-on-write
+        generation — the write-path sibling of the maintenance plane's
+        one-generation publish.  A cross-tenant ingest batch that touched
+        N bindings would pay N generation bumps (and N block copies of any
+        shared block) through per-binding `sync()`; here every binding's
+        due rows land in a single `put_many`.  Returns rows written.
+
+        Locking mirrors `FleetRefresher.refresh()`: binding sync locks are
+        taken in namespace order, always before the store lock inside
+        put_many — the same order `sync()` uses — so concurrent
+        syncs/flushes serialize cleanly instead of deadlocking.  A
+        detached binding fails loudly, exactly like `sync()`."""
+        if bindings is None:
+            bindings = self.bindings()
+        bindings = sorted({id(b): b for b in bindings}.values(),
+                          key=lambda b: b.namespace)
+        with contextlib.ExitStack() as stack:
+            for b in bindings:
+                stack.enter_context(b._sync_lock)
+                if b._detached:
+                    raise RuntimeError(b._detach_reason or (
+                        f"binding for {b.namespace!r} was detached from "
+                        f"the store; services holding it must be rebuilt"))
+            items: List[Tuple[object, Mapping]] = []
+            updates = []
+            for b in bindings:
+                p = b.predictor
+                version = getattr(p, "version", 0)
+                changed_since = getattr(p, "changed_since", None)
+                cursor: Optional[float] = None
+                if b._synced_version is None:
+                    if changed_since is not None:
+                        _, cursor = changed_since(float("inf"))
+                    tasks = list(p.task_names())
+                elif changed_since is not None:
+                    tasks, cursor = changed_since(b._change_cursor)
+                else:
+                    tasks = ([] if b._synced_version == version
+                             else list(p.task_names()))
+                items.extend((b.key(t), p.export_posterior(t))
+                             for t in tasks)
+                updates.append((b, cursor, version, len(tasks)))
+            if items:
+                self.put_many(items)        # ONE generation for the batch
+            written = 0
+            for b, cursor, version, n in updates:
+                if cursor is not None:
+                    b._change_cursor = cursor
+                b._synced_version = version
+                base = getattr(b.predictor, "base", b.predictor)
+                base_version = getattr(base, "version", 0)
+                if base_version != b._factor_version:
+                    b._factor_cache.clear()
+                    b._factor_version = base_version
+                written += n
+            return written
 
     def bind(self, tenant: str, workflow: str, predictor,
              benches: Optional[Mapping] = None, sync: bool = True

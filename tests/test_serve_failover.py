@@ -40,13 +40,20 @@ def test_kill_and_failover_bit_identical(tmp_path):
                 # acked observations; checkpoint midway so the tail
                 # lives ONLY in the oplog
                 acked = []
-                for i in range(12):
+                for i in range(6):
                     acked.append(await client.observe(TaskCompletion(
                         w, f"u{i}", "bwa", "local", 1.0 + 0.5 * i,
                         20.0 + 10.0 * i), t, w))
                     if i == 5:
                         ck = await client.checkpoint(victim)
                         assert ck["seq"] == acked[-1]
+                # the rest of the tail arrives as ONE coalesced batch —
+                # a single oplog group commit past the watermark, which
+                # the failover replay must expand record-by-record
+                acked += await client.observe_many(
+                    [(TaskCompletion(w, f"u{i}", "bwa", "local",
+                                     1.0 + 0.5 * i, 20.0 + 10.0 * i), t, w)
+                     for i in range(6, 12)])
                 assert acked == list(range(1, 13))
                 digest_before = await client.digest(t, w)
                 pred_before = await client.predict(
