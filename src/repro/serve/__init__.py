@@ -8,8 +8,9 @@
   replica   — COW-snapshot shipping to read replicas
   failover  — OpLog write-ahead durability + ShardSupervisor warm failover
 """
-from repro.serve.client import (RemoteError, RetryPolicy, ServingClient,
-                                TransportError, WrongShardError)
+from repro.serve.client import (PartialObserveError, RemoteError,
+                                RetryPolicy, ServingClient, TransportError,
+                                WrongShardError)
 from repro.serve.failover import OpLog, ShardSpec, ShardSupervisor
 from repro.serve.placement import ShardInfo, ShardMap, stable_hash
 from repro.serve.replica import ReplicaServer, ReplicaShipper
@@ -19,7 +20,8 @@ from repro.serve.wire import (MAX_FRAME, FrameTooLarge, TruncatedFrame,
                               WireError)
 
 __all__ = [
-    "MAX_FRAME", "FrameTooLarge", "OpLog", "RemoteError", "ReplicaServer",
+    "MAX_FRAME", "FrameTooLarge", "OpLog", "PartialObserveError",
+    "RemoteError", "ReplicaServer",
     "ReplicaShipper", "RetryPolicy", "RpcError", "ServingClient",
     "ShardInfo", "ShardMap", "ShardMeta", "ShardServer", "ShardSpec",
     "ShardSupervisor", "TransportError", "TruncatedFrame", "WireError",

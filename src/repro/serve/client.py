@@ -80,6 +80,25 @@ class TransportError(ConnectionError):
         self.sent = sent
 
 
+class PartialObserveError(RuntimeError):
+    """An `observe_many` round partially succeeded: some shard groups
+    returned durable ack seqs while another group failed.  `seqs[i]` is
+    record i's ack (None where it failed) and `errors[i]` the failing
+    record's exception.  Raised instead of a blanket round failure so a
+    caller never re-sends records that already landed — observes are not
+    idempotent, and the acked ones are durably applied."""
+
+    def __init__(self, seqs: List[Optional[int]],
+                 errors: Dict[int, BaseException]):
+        n_ok = sum(s is not None for s in seqs)
+        first = next(iter(errors.values()))
+        super().__init__(
+            f"{len(errors)}/{len(seqs)} observes failed "
+            f"({n_ok} durably acked): {first!r}")
+        self.seqs = seqs
+        self.errors = errors
+
+
 def _wire_queries(queries: Sequence) -> List[list]:
     out = []
     for q in queries:
@@ -341,15 +360,35 @@ class ServingClient:
 
     async def _observe_drain(self) -> None:
         """Flush the observe window: everything parked goes out as one
-        coalesced `observe_many` round.  A round-level failure fails
-        every parked future — callers keep per-record error visibility."""
-        await asyncio.sleep(self.observe_window_s or 0.0)
-        parked, self._obs_buf = self._obs_buf, []
-        if not parked:
-            return
+        coalesced `observe_many` round, resolved per record (a partial
+        round acks the records that landed and fails only the rest).
+
+        Observes arriving while this drain is on the wire park in the
+        fresh buffer but see a still-running task and schedule nothing,
+        so the drain re-checks the buffer when it finishes — success or
+        failure — and chains a new drain; no parked future can strand."""
+        try:
+            await asyncio.sleep(self.observe_window_s or 0.0)
+            parked, self._obs_buf = self._obs_buf, []
+            if parked:
+                await self._observe_flush(parked)
+        finally:
+            if self._obs_buf:
+                self._obs_task = asyncio.ensure_future(self._observe_drain())
+
+    async def _observe_flush(self, parked: List[tuple]) -> None:
         try:
             seqs = await self.observe_many(
                 [(c, t, w) for c, t, w, _ in parked])
+        except PartialObserveError as e:
+            for i, (*_, fut) in enumerate(parked):
+                if fut.done():
+                    continue
+                if e.seqs[i] is not None:
+                    fut.set_result(e.seqs[i])     # durably acked records
+                else:                             # keep their real acks
+                    fut.set_exception(e.errors.get(i, e))
+            return
         except BaseException as e:     # noqa: BLE001 — parked callers
             for *_, fut in parked:     # must see the round's failure
                 if not fut.done():
@@ -366,8 +405,17 @@ class ServingClient:
         shards in flight concurrently.  Re-groups batches displaced by a
         map change mid-round — safe under the no-resend rule because the
         shard rejects a whole frame (`wrong_shard`) before applying any
-        record of it."""
+        record of it.
+
+        A failing shard group fails only its OWN records: acks already
+        returned by the round's other groups are durable and must not be
+        discarded (a caller retrying them would double-count).  When the
+        round is split — some records acked, some failed — the mixed
+        outcome surfaces as `PartialObserveError` carrying per-record
+        seqs and exceptions; only an all-fail round raises the group
+        error directly."""
         out: List[Optional[int]] = [None] * len(batch)
+        errors: Dict[int, BaseException] = {}
         remaining = list(range(len(batch)))
         last: Optional[BaseException] = None
         for _ in range(self.retry.max_attempts):
@@ -392,13 +440,19 @@ class ServingClient:
                     next_remaining.extend(idxs)   # map moved: re-group
                     last = res
                 elif isinstance(res, BaseException):
-                    raise res
+                    for i in idxs:                # group failure stays
+                        errors[i] = res           # scoped to the group
                 else:
                     for i, seq in zip(idxs, res["seqs"]):
                         out[i] = int(seq)
             remaining = next_remaining
-        if remaining:
-            raise last or RuntimeError("observe_many failed to converge")
+        for i in remaining:                       # wrong_shard budget spent
+            errors[i] = last or RuntimeError(
+                "observe_many failed to converge")
+        if errors:
+            if all(s is None for s in out):
+                raise next(iter(errors.values()))
+            raise PartialObserveError(out, errors)
         return out    # type: ignore[return-value]
 
     async def digest(self, tenant: str, workflow: str) -> str:
@@ -424,13 +478,18 @@ class ServingClient:
             for sid in self.map.shard_ids()])
 
     async def close(self) -> None:
-        if self._obs_task is not None and not self._obs_task.done():
-            # let a pending observe window flush before tearing down
-            # connections (parked callers get real acks, not resets)
+        # let pending observe windows flush before tearing down
+        # connections (parked callers get real acks, not resets); a
+        # finishing drain may chain a successor for late arrivals, so
+        # follow the chain until no new drain replaces the awaited one
+        while self._obs_task is not None and not self._obs_task.done():
+            task = self._obs_task
             try:
-                await self._obs_task
+                await task
             except Exception:          # noqa: BLE001 — drain reported to
                 pass                   # its own parked futures already
+            if self._obs_task is task:
+                break
         for conn in self._conns.values():
             await conn.close()
         self._conns.clear()

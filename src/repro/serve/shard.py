@@ -342,12 +342,15 @@ class ShardServer:
         if touched:
             # ONE COW generation for the whole cross-tenant drain; a
             # failed publish leaves the rows due (cursors unmoved) for
-            # the next sync — acks stand, durability already committed
+            # the next sync — acks stand, durability already committed.
+            # The failure is kept on last_ingest_error (surfaced by the
+            # health RPC) until a later publish succeeds and clears it.
             try:
                 gen0 = self.store.generation
                 self.store.sync_bindings(touched)
                 self.ingest.generations_published += \
                     self.store.generation - gen0
+                self.last_ingest_error = None
             except Exception as e:            # noqa: BLE001
                 self.last_ingest_error = e
 
@@ -405,6 +408,11 @@ class ShardServer:
                 "generation": self.store.generation,
                 "seq": self.applied_seq, "pid": os.getpid(),
                 "ingest": self.ingest_stats().as_dict(),
+                # non-None iff the LATEST binding-sync publish failed
+                # (rows are due but replicas/readers see a stale store)
+                "last_ingest_error": (
+                    None if self.last_ingest_error is None
+                    else repr(self.last_ingest_error)),
                 "namespaces": [ns for ns in self.store.namespaces()
                                if not ns.startswith(META_TENANT)]}
 

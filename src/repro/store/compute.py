@@ -72,17 +72,15 @@ def fold_stacked(nigs, xs, ys, impl: str = "auto"):
     `fit_stacked`: T NIG states + ragged per-task observation rows ->
     T updated states from ONE fold dispatch (`core.bayes.nig_update_batch`).
 
-    impl='auto' keeps the float64 CPU fold everywhere except on TPU:
-    the ingest plane's exactness contract (bit-identical to the scalar
-    `nig_update` chain, which feeds state digests and failover replay)
-    only holds for the float64 path, so the fused float32 kernel is
-    reserved for device-resident posterior banks."""
+    Unlike its read-path siblings, impl='auto' NEVER routes to a device
+    kernel — not even on TPU: the ingest plane's exactness contract
+    (bit-identical to the scalar `nig_update` chain, which feeds state
+    digests and failover replay) only holds for the float64 CPU fold.
+    The float32 'pallas'/'interpret'/'scan' forms are an explicit opt-in
+    for device-resident posterior banks that keep no digest."""
     from repro.core import bayes
-    from repro.kernels import ops
-    if impl in ("pallas", "interpret", "scan") \
-            or (impl == "auto" and ops._on_tpu()):
-        return bayes.nig_update_batch(
-            nigs, xs, ys, impl="pallas" if impl == "auto" else impl)
+    if impl in ("pallas", "interpret", "scan"):
+        return bayes.nig_update_batch(nigs, xs, ys, impl=impl)
     return bayes.nig_update_batch(nigs, xs, ys, impl="numpy")
 
 

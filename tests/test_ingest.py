@@ -26,8 +26,9 @@ from hypothesis import strategies as st
 
 from repro.core import bayes
 from repro.online import IngestStats, PredictionService, TaskCompletion
-from repro.serve import (OpLog, RetryPolicy, ServingClient, ShardInfo,
-                         ShardMap, boot_shard, state_digest)
+from repro.serve import (OpLog, PartialObserveError, RemoteError,
+                         RetryPolicy, ServingClient, ShardInfo, ShardMap,
+                         boot_shard, state_digest)
 from repro.store import PosteriorStore
 from repro.store.frontend import QueueFullError
 from serve_helpers import TENANTS, bootstrap, make_benches, make_predictor
@@ -454,6 +455,137 @@ def test_observe_many_wrong_shard_reroutes_whole_groups(tmp_path):
             for srv in servers:
                 await srv.aclose()
     _run(go())
+
+
+def test_observe_window_drain_chains_for_midflight_arrivals(tmp_path):
+    """Observes parked while a drain round is on the wire see a
+    still-running drain task and schedule nothing — the finishing drain
+    must chain a successor for them, or their futures strand forever."""
+    async def go():
+        # slow shard ingest window keeps the first drain's RPC in flight
+        # long enough for a second observe to park behind it
+        servers, client = await _boot_fleet(
+            1, str(tmp_path), client_opts={"observe_window_s": 0.01},
+            ingest_window_s=0.2)
+        try:
+            t, w = TENANTS[0]
+            fut1 = asyncio.ensure_future(client.observe(
+                TaskCompletion(w, "mf0", "bwa", "local", 1.0, 30.0), t, w))
+            await asyncio.sleep(0.08)      # drain 1 is awaiting the shard
+            fut2 = asyncio.ensure_future(client.observe(
+                TaskCompletion(w, "mf1", "bwa", "local", 1.5, 40.0), t, w))
+            seqs = await asyncio.wait_for(asyncio.gather(fut1, fut2), 10.0)
+            assert sorted(seqs) == [1, 2]
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_observe_many_partial_round_keeps_survivor_acks(tmp_path):
+    """A failing shard group fails only its own records: acks returned
+    by the round's other groups are durable and must surface, not be
+    discarded by a round-wide raise (retrying them would double-count)."""
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            t, w = TENANTS[0]
+            good_sid = client.map.shard_for(f"{t}/{w}")
+            # an unbound namespace routed to the OTHER shard: its group
+            # answers unknown_namespace while the good group lands
+            gt = gw = None
+            for i in range(200):
+                cand = (f"ghost{i}", "wf")
+                if client.map.shard_for(f"{cand[0]}/{cand[1]}") != good_sid:
+                    gt, gw = cand
+                    break
+            assert gt is not None
+            oracle = make_predictor(salt=0)
+            comp = TaskCompletion(w, "pr0", "bwa", "local", 1.0, 30.0)
+            with pytest.raises(PartialObserveError) as ei:
+                await client.observe_many(
+                    [(comp, t, w),
+                     (TaskCompletion(gw, "pr1", "bwa", "local", 1.0, 30.0),
+                      gt, gw)])
+            e = ei.value
+            assert e.seqs[0] == 1 and e.seqs[1] is None
+            assert isinstance(e.errors[1], RemoteError)
+            assert e.errors[1].kind == "unknown_namespace"
+            # the acked record really landed, exactly once
+            oracle.observe(comp)
+            assert await client.digest(t, w) == state_digest(oracle)
+
+            # the coalescing window resolves the same split per future:
+            # the durable record gets its ack, only the bad one errors
+            win = ServingClient(client.map, observe_window_s=0.01)
+            try:
+                comp2 = TaskCompletion(w, "pr2", "bwa", "local", 2.0, 50.0)
+                res = await asyncio.wait_for(asyncio.gather(
+                    win.observe(comp2, t, w),
+                    win.observe(TaskCompletion(gw, "pr3", "bwa", "local",
+                                               1.0, 30.0), gt, gw),
+                    return_exceptions=True), 10.0)
+                assert res[0] == 2
+                assert isinstance(res[1], RemoteError)
+                assert res[1].kind == "unknown_namespace"
+            finally:
+                await win.close()
+            oracle.observe(comp2)
+            assert await client.digest(t, w) == state_digest(oracle)
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_health_surfaces_and_clears_ingest_publish_failure(tmp_path):
+    """A failed binding-sync publish after a drain must be visible to
+    operators via the health RPC, and must clear once a later publish
+    succeeds (it reflects CURRENT staleness, not history)."""
+    async def go():
+        servers, client = await _boot_fleet(1, str(tmp_path))
+        try:
+            srv = servers[0]
+            t, w = TENANTS[0]
+            orig = srv.store.sync_bindings
+
+            def boom(*a, **k):
+                raise RuntimeError("disk full")
+
+            srv.store.sync_bindings = boom
+            seq = await client.observe(
+                TaskCompletion(w, "hf0", "bwa", "local", 1.0, 30.0), t, w)
+            assert seq == 1            # ack stands: durability committed
+            h = await client.health("s0")
+            assert h["last_ingest_error"] is not None
+            assert "disk full" in h["last_ingest_error"]
+            srv.store.sync_bindings = orig
+            await client.observe(
+                TaskCompletion(w, "hf1", "bwa", "local", 1.5, 40.0), t, w)
+            h = await client.health("s0")
+            assert h["last_ingest_error"] is None
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_fold_stacked_auto_stays_on_float64_chain():
+    """`fold_stacked` feeds digest-bearing streaming states, so its
+    default impl must be bitwise the scalar `nig_update` chain on EVERY
+    backend — the device kernels are explicit opt-ins only."""
+    from repro.store.compute import fold_stacked
+    rng = np.random.default_rng(11)
+    nigs = _fresh_nigs(rng, 5)
+    xs = [list(rng.uniform(0.05, 3.0, int(rng.integers(0, 5))))
+          for _ in nigs]
+    ys = [[float(rng.uniform(4.0, 120.0)) for _ in row] for row in xs]
+    got = fold_stacked(nigs, xs, ys)
+    for nig, xr, yr, g in zip(nigs, xs, ys, got):
+        want = dict(nig)
+        for x, y in zip(xr, yr):
+            want = bayes.nig_update(want, x, y)
+        for key in ("mu", "v", "prec", "a", "b", "n_obs"):
+            np.testing.assert_array_equal(
+                np.asarray(g[key]), np.asarray(want[key]),
+                err_msg=f"fold_stacked default diverges on leaf {key!r}")
 
 
 # --- fused decision plane: batch-dirty rows in one pass ------------------------
