@@ -1,0 +1,330 @@
+"""Benchmark: live resharding drill — add and remove a shard under
+sustained predict+observe load, with replica reads riding along.
+
+The fleet is in-process (shard servers on one event loop, real sockets,
+real wire frames): the drill measures protocol correctness and latency
+impact, not multi-core throughput — that is `distributed_serving`'s
+job, and on a single-core CI host extra processes would only add noise.
+
+Timeline (load runs the whole time, from a client that is NEVER told
+about the rebalances — it must self-heal off `wrong_shard` replies):
+
+  t=0        2 shards (s0, s1) serve 6 namespaces; a read replica ships
+             off s1 with an explicit staleness bound
+  t=1/3 T    s2 joins: RebalanceCoordinator fences the moved
+             namespaces, drains ingest, ships rows+streaming states,
+             verifies digest parity on s2, publishes the bumped map
+  t=2/3 T    s0 leaves: its namespaces migrate to the survivors the
+             same way; s0 keeps listening only to answer `wrong_shard`
+  t=T        load stops; every namespace's final shard digest is
+             compared against a LOCAL ORACLE — a fresh predictor that
+             folds exactly the completions whose acks the load client
+             received, in ack order
+
+The oracle check is the zero-loss claim in executable form: digest
+equality means every acked observation survived both migrations (none
+lost) and nothing was applied twice (no double-fold) — bit-for-bit,
+through fence, ship, and two map changes.  Predict rounds must never
+fail (predicts are not fenced; `migrating`/`wrong_shard`/`queue_full`
+all retry within the client's budget), and replica reads are never
+served beyond the configured generation lag (enforced replica-side;
+the drill counts served vs redirected reads).
+
+  PYTHONPATH=src python -m benchmarks.resharding_drill [--smoke]
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+from repro.core.microbench import simulate_microbench
+from repro.core.predictor import LotaruPredictor
+from repro.core.traces import TraceRow
+from repro.online import OnlinePredictor, TaskCompletion
+from repro.sched.cluster import LOCAL, TARGET_MACHINES
+from repro.serve import (PartialObserveError, RebalanceCoordinator,
+                         RemoteError, ReplicaServer, ReplicaShipper,
+                         ReplicaStaleError, RetryPolicy, ServingClient,
+                         ShardInfo, ShardMap, boot_shard, state_digest)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TENANTS: List[Tuple[str, str]] = [
+    (f"tenant{i:02d}", wf) for i, wf in enumerate(
+        ["rnaseq", "atacseq", "chipseq", "mag", "eager", "ampliseq"])]
+TASKS = ("bwa", "idx", "sort")
+MAX_GENERATION_LAG = 3
+
+
+def _make_predictor(salt: int = 0) -> OnlinePredictor:
+    lot = LotaruPredictor("G", local_bench=simulate_microbench(LOCAL, 1))
+    traces = []
+    for j, t in enumerate(TASKS):
+        traces += [TraceRow("wf", t, "local", s,
+                            2.0 + j + (20.0 + 7 * j + salt) * s)
+                   for s in np.linspace(0.05, 0.4, 6)]
+    return OnlinePredictor(lot.fit(traces))
+
+
+def _benches():
+    return {n.name: simulate_microbench(n, 1) for n in TARGET_MACHINES}
+
+
+def bootstrap(shard_id, shard_map):
+    benches = _benches()
+    return {(t, w): (_make_predictor(salt=i), benches)
+            for i, (t, w) in enumerate(TENANTS)}
+
+
+def _comp(w: str, i: int) -> TaskCompletion:
+    task = TASKS[i % len(TASKS)]
+    gb = 0.2 + (i % 37) * 0.31
+    return TaskCompletion(w, f"u{i}", task, "local", gb, 5.0 + 23.0 * gb)
+
+
+async def _drill(duration_s: float, seed: int) -> dict:
+    tmp = tempfile.mkdtemp(prefix="resharding_drill_")
+    rng = np.random.default_rng(seed)
+    out: dict = {"duration_s": duration_s}
+    servers = []
+    try:
+        # ---- fleet: 2 shards + a replica shipping off s1 ------------------
+        m = ShardMap([ShardInfo(s, "127.0.0.1", 0) for s in ("s0", "s1")])
+        for sid in ("s0", "s1"):
+            srv = boot_shard(sid, m, bootstrap,
+                             checkpoint_dir=os.path.join(tmp, sid + "_ck"),
+                             oplog_path=os.path.join(tmp, sid + ".oplog"),
+                             window_s=0.001, ingest_window_s=0.002)
+            await srv.start()
+            m = m.with_address(sid, "127.0.0.1", srv.port)
+            servers.append(srv)
+        for srv in servers:
+            srv.map = m
+        s1 = servers[1]
+        replica = await ReplicaServer(
+            max_generation_lag=MAX_GENERATION_LAG).start()
+        replica_addr = ("127.0.0.1", replica.port)
+        shipper = ReplicaShipper(s1.store, [replica_addr],
+                                 interval_s=0.05).start()
+        # a namespace that stays on s1 across BOTH planned rebalances
+        # (pure placement math), so its rows remain in the shipped
+        # snapshots for the whole drill
+        mid_m = m.with_shard("s2", "127.0.0.1", 1)
+        rep_ns = next((t, w) for t, w in TENANTS
+                      if all(mm.shard_for(f"{t}/{w}") == "s1"
+                             for mm in (m, mid_m, mid_m.without_shard("s0"))))
+        rep_keys = [s1.store.binding(*rep_ns).key_str(task)
+                    for task in TASKS[:2]]
+
+        # the LOAD client self-heals mid-traffic; the coordinator gets
+        # its own client (publishing through the load client would be
+        # telling the load about the rebalance)
+        load = ServingClient(m, retry=RetryPolicy(max_attempts=6))
+        coord_client = ServingClient(m)
+        coord = RebalanceCoordinator(coord_client, release_grace_s=0.3)
+
+        # ---- load workers -------------------------------------------------
+        stop = asyncio.Event()
+        pred_lat: List[float] = []
+        stats = {"predicts": 0, "predict_failures": 0, "observe_rounds": 0,
+                 "observe_rejected": 0, "replica_served": 0,
+                 "replica_redirected": 0, "replica_errors": 0}
+        acked: Dict[str, List[Tuple[int, TaskCompletion]]] = {
+            f"{t}/{w}": [] for t, w in TENANTS}
+        counters = {f"{t}/{w}": 0 for t, w in TENANTS}
+
+        async def predict_worker() -> None:
+            variants = [[(t, w, [(TASKS[int(rng.integers(len(TASKS)))],
+                                  None, float(rng.uniform(0.1, 8.0)))
+                                 for _ in range(16)])
+                         for t, w in TENANTS] for _ in range(4)]
+            n = 0
+            while not stop.is_set():
+                batch = variants[n % len(variants)]
+                n += 1
+                r0 = time.perf_counter()
+                try:
+                    outs = await load.predict_many(batch)
+                    pred_lat.append(time.perf_counter() - r0)
+                    stats["predicts"] += sum(len(o) for o in outs)
+                except Exception:    # noqa: BLE001 — a dropped predict
+                    stats["predict_failures"] += 1      # fails the drill
+                await asyncio.sleep(0.002)
+
+        async def observe_worker() -> None:
+            while not stop.is_set():
+                batch = []
+                for t, w in TENANTS:
+                    ns = f"{t}/{w}"
+                    batch.append((_comp(w, counters[ns]), t, w))
+                    counters[ns] += 1
+                recs = [(c, t, w) for c, t, w in batch]
+                try:
+                    seqs = await load.observe_many(recs)
+                except PartialObserveError as e:
+                    seqs = e.seqs                       # acked subset keeps
+                    stats["observe_rejected"] += sum(   # its durable acks
+                        1 for s in e.seqs if s is None)
+                except Exception:    # noqa: BLE001 — whole round rejected:
+                    stats["observe_rejected"] += len(recs)   # nothing acked,
+                    await asyncio.sleep(0.005)               # nothing folded
+                    continue
+                for (c, t, w), seq in zip(recs, seqs):
+                    if seq is not None:
+                        acked[f"{t}/{w}"].append((int(seq), c))
+                stats["observe_rounds"] += 1
+                await asyncio.sleep(0.002)
+
+        async def replica_worker() -> None:
+            x = [1.0, 2.5]
+            while not stop.is_set():
+                try:
+                    p = await load.predict_base(replica_addr, rep_keys, x)
+                    assert p.shape == (2, 3)
+                    stats["replica_served"] += 1
+                except ReplicaStaleError:
+                    # beyond the bound: the replica refused — redirect
+                    # the read to the primary, which always serves
+                    await load.predict(
+                        [(TASKS[0], None, 1.0)], *rep_ns)
+                    stats["replica_redirected"] += 1
+                except Exception:    # noqa: BLE001 — transport during
+                    stats["replica_errors"] += 1        # shard churn
+                await asyncio.sleep(0.01)
+
+        workers = [asyncio.ensure_future(w())
+                   for w in (predict_worker, observe_worker,
+                             replica_worker)]
+
+        # ---- the two rebalances under load --------------------------------
+        await asyncio.sleep(duration_s / 3)
+        s2 = boot_shard("s2", coord_client.map, bootstrap,
+                        checkpoint_dir=os.path.join(tmp, "s2_ck"),
+                        oplog_path=os.path.join(tmp, "s2.oplog"),
+                        window_s=0.001, ingest_window_s=0.002)
+        await s2.start()
+        servers.append(s2)
+        t0 = time.perf_counter()
+        add_report = await coord.add_shard("s2", "127.0.0.1", s2.port)
+        out["add_s"] = time.perf_counter() - t0
+        out["add_moved"] = len(add_report.moved)
+        out["add_rows_shipped"] = add_report.rows_shipped
+
+        await asyncio.sleep(duration_s / 3)
+        t0 = time.perf_counter()
+        remove_report = await coord.remove_shard("s0")
+        out["remove_s"] = time.perf_counter() - t0
+        out["remove_moved"] = len(remove_report.moved)
+
+        await asyncio.sleep(duration_s / 3)
+        stop.set()
+        await asyncio.gather(*workers)
+
+        # ---- the oracle: acked completions, ack order, bit parity ---------
+        digest_mismatches = []
+        total_acked = 0
+        for i, (t, w) in enumerate(TENANTS):
+            ns = f"{t}/{w}"
+            # APPEND order, not seq order: ack seqs are per-shard oplog
+            # sequences, so a migrated namespace's post-handoff acks
+            # restart low on the new shard — but the worker awaits each
+            # round, so per-namespace append order IS the fold order
+            recs = acked[ns]
+            total_acked += len(recs)
+            oracle = _make_predictor(salt=i)
+            if recs:
+                oracle.observe_many([c for _, c in recs])
+            want = state_digest(oracle)
+            got = await load.digest(t, w)
+            if got != want:
+                digest_mismatches.append(ns)
+        await shipper.stop()
+        out.update(
+            predicts=stats["predicts"],
+            predict_failures=stats["predict_failures"],
+            predict_p50_ms=float(np.percentile(pred_lat, 50) * 1e3),
+            predict_p99_ms=float(np.percentile(pred_lat, 99) * 1e3),
+            observe_rounds=stats["observe_rounds"],
+            acked_observations=total_acked,
+            observe_rejected=stats["observe_rejected"],
+            digest_mismatches=digest_mismatches,
+            lost_acked=len(digest_mismatches),
+            migrations_verified=bool(add_report.verified
+                                     and remove_report.verified),
+            replica_served=stats["replica_served"],
+            replica_redirected=stats["replica_redirected"],
+            replica_errors=stats["replica_errors"],
+            replica_stale_rejections=replica.stale_rejections,
+            max_generation_lag=MAX_GENERATION_LAG,
+            final_shards=coord_client.map.shard_ids(),
+            load_client_version=load.map.version,
+            published_version=coord_client.map.version)
+        await load.close()
+        await coord_client.close()
+        await replica.aclose()
+        for srv in servers:
+            await srv.aclose()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return out
+
+
+def run(duration_s: float = 9.0, seed: int = 0, quiet: bool = False) -> dict:
+    out = asyncio.run(_drill(duration_s, seed))
+    # the load client must have healed to the final published map purely
+    # off wrong_shard replies — nobody ever called set_map on it
+    out["self_healed"] = out["load_client_version"] \
+        == out["published_version"]
+    ok = (out["predict_failures"] == 0
+          and out["lost_acked"] == 0
+          and out["migrations_verified"]
+          and out["self_healed"]
+          and out["final_shards"] == ["s1", "s2"]
+          and out["acked_observations"] > 0)
+    out["ok"] = bool(ok)
+    if not quiet:
+        rows = [
+            ["predict rounds (p50 / p99 ms)",
+             f"{out['predict_p50_ms']:.1f} / {out['predict_p99_ms']:.1f}"],
+            ["predictions served", f"{out['predicts']:,}"],
+            ["dropped predict rounds", str(out["predict_failures"])],
+            ["acked observations", f"{out['acked_observations']:,}"],
+            ["rejected (retry-budget) observes",
+             str(out["observe_rejected"])],
+            ["namespaces moved (add / remove)",
+             f"{out['add_moved']} / {out['remove_moved']}"],
+            ["rebalance wall-clock (add / remove)",
+             f"{out['add_s']:.2f}s / {out['remove_s']:.2f}s"],
+            ["oracle digest mismatches", str(out["lost_acked"])],
+            ["replica reads served / redirected",
+             f"{out['replica_served']} / {out['replica_redirected']}"],
+        ]
+        print(fmt_table(["resharding drill", "value"], rows,
+                        "Live resharding under load"))
+        print(f"\n[claim] a shard joined and a shard left under live "
+              f"predict+observe traffic: {out['acked_observations']} acked "
+              f"observations survived both migrations bit-identically "
+              f"({out['lost_acked']} oracle digest mismatches), "
+              f"{out['predict_failures']} predict rounds dropped, the load "
+              f"client self-healed to map v{out['load_client_version']} "
+              f"off wrong_shard replies alone, and replica reads were "
+              f"never served beyond {out['max_generation_lag']} "
+              f"generations of lag ({out['replica_redirected']} redirected "
+              f"to the primary) -> {'PASS' if ok else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: short load window")
+    a = ap.parse_args()
+    run(duration_s=4.5 if a.smoke else 9.0)

@@ -25,8 +25,9 @@ def main(argv=None):
                             ingest_throughput, online_adaptation,
                             prediction_error, profiling_time,
                             refresh_overhead, replan_latency,
-                            roofline_report, scheduling_makespan,
-                            service_throughput, straggler_mitigation)
+                            resharding_drill, roofline_report,
+                            scheduling_makespan, service_throughput,
+                            straggler_mitigation)
     jobs = {
         "prediction_error": lambda: prediction_error.run(),
         "profiling_time": lambda: profiling_time.run(),
@@ -47,6 +48,8 @@ def main(argv=None):
         if args.full else distributed_serving.run(
             n_shards=2, n_client_procs=2, duration_s=4.0,
             queries_per_tenant=256, n_callers=4, repeats=3),
+        "resharding_drill": lambda: resharding_drill.run(
+            duration_s=9.0 if args.full else 4.5),
     }
     full_only = {"straggler_mitigation"}
     only = set(args.only.split(",")) if args.only else None

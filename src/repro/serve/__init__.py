@@ -5,25 +5,37 @@
   shard     — the shard server process (store slice + frontend + refresher)
   client    — fan-out ServingClient (routing, coalescing, retries,
               backpressure propagation)
-  replica   — COW-snapshot shipping to read replicas
-  failover  — OpLog write-ahead durability + ShardSupervisor warm failover
+  replica   — COW-snapshot shipping to read replicas, staleness-bounded
+              replica reads (max_generation_lag)
+  failover  — OpLog write-ahead durability + ShardSupervisor warm
+              failover + HealthMonitor restart loop
+  rebalance — live resharding coordinator (fence -> ship -> verify ->
+              publish -> release, zero lost acked observations)
 """
-from repro.serve.client import (PartialObserveError, RemoteError,
-                                RetryPolicy, ServingClient, TransportError,
-                                WrongShardError)
-from repro.serve.failover import OpLog, ShardSpec, ShardSupervisor
+from repro.serve.client import (MigratingError, PartialObserveError,
+                                RemoteError, ReplicaStaleError, RetryPolicy,
+                                ServingClient, TransportError,
+                                WrongShardError, call_direct)
+from repro.serve.failover import (HealthMonitor, HealthPolicy, OpLog,
+                                  ShardSpec, ShardSupervisor, shard_rpc)
 from repro.serve.placement import ShardInfo, ShardMap, stable_hash
-from repro.serve.replica import ReplicaServer, ReplicaShipper
+from repro.serve.rebalance import (RebalanceCoordinator, RebalanceError,
+                                   RebalanceReport)
+from repro.serve.replica import (ReplicaServer, ReplicaShipper,
+                                 StaleReplicaError)
 from repro.serve.shard import (RpcError, ShardMeta, ShardServer, boot_shard,
                                state_digest)
 from repro.serve.wire import (MAX_FRAME, FrameTooLarge, TruncatedFrame,
                               WireError)
 
 __all__ = [
-    "MAX_FRAME", "FrameTooLarge", "OpLog", "PartialObserveError",
-    "RemoteError", "ReplicaServer",
-    "ReplicaShipper", "RetryPolicy", "RpcError", "ServingClient",
-    "ShardInfo", "ShardMap", "ShardMeta", "ShardServer", "ShardSpec",
-    "ShardSupervisor", "TransportError", "TruncatedFrame", "WireError",
-    "WrongShardError", "boot_shard", "stable_hash", "state_digest",
+    "MAX_FRAME", "FrameTooLarge", "HealthMonitor", "HealthPolicy",
+    "MigratingError", "OpLog", "PartialObserveError",
+    "RebalanceCoordinator", "RebalanceError", "RebalanceReport",
+    "RemoteError", "ReplicaServer", "ReplicaShipper", "ReplicaStaleError",
+    "RetryPolicy", "RpcError", "ServingClient", "ShardInfo", "ShardMap",
+    "ShardMeta", "ShardServer", "ShardSpec", "ShardSupervisor",
+    "StaleReplicaError", "TransportError", "TruncatedFrame", "WireError",
+    "WrongShardError", "boot_shard", "call_direct", "shard_rpc",
+    "stable_hash", "state_digest",
 ]

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serve.placement import ShardMap
+from repro.serve.wire import read_frame, write_frame
 from repro.store.frontend import QueueFullError
 from repro.store.keys import namespace_str
 
@@ -71,6 +72,27 @@ class WrongShardError(RemoteError):
         super().__init__("wrong_shard", msg)
 
 
+class MigratingError(RemoteError):
+    """The namespace is fenced mid-rebalance on its (old) owner.  Like
+    `wrong_shard`/`queue_full`, the shard rejects the request BEFORE
+    anything parks, so nothing was applied and a retry is always safe —
+    `_call` retries with backoff, and once the bumped map is published
+    the retry lands on the new owner."""
+
+    def __init__(self, msg: str):
+        super().__init__("migrating", msg)
+
+
+class ReplicaStaleError(RemoteError):
+    """A replica refused a read because its generation lag exceeded its
+    `max_generation_lag` bound; redirect the read to the primary."""
+
+    def __init__(self, msg: str, lag: int, bound: int):
+        super().__init__("stale_replica", msg)
+        self.lag = lag
+        self.bound = bound
+
+
 class TransportError(ConnectionError):
     """Connection/timeout failure; `sent` says whether the request frame
     reached the socket (the idempotency line for observe)."""
@@ -97,6 +119,38 @@ class PartialObserveError(RuntimeError):
             f"({n_ok} durably acked): {first!r}")
         self.seqs = seqs
         self.errors = errors
+
+
+async def call_direct(address: Tuple[str, int], op: str,
+                      payload: Optional[dict] = None,
+                      timeout: float = 30.0) -> dict:
+    """One-shot RPC to an explicit address OUTSIDE the shard map: read
+    replicas (never in the map) and decommissioned shards mid-rebalance
+    (already removed from the map but still holding fenced namespaces).
+    Opens, sends one frame, awaits the reply, closes — no pooling, no
+    retry; callers that need retry semantics go through ServingClient."""
+    reader, writer = await asyncio.wait_for(
+        asyncio.open_connection(*address), timeout)
+    try:
+        await write_frame(writer, {"i": 0, "op": op, **(payload or {})})
+        resp = await asyncio.wait_for(read_frame(reader), timeout)
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+    if resp is None:
+        raise TransportError("peer closed before replying", sent=True)
+    if resp.get("ok"):
+        return resp["r"]
+    err = resp.get("e") or {}
+    kind = err.get("k", "error")
+    if kind == "stale_replica":
+        raise ReplicaStaleError(err.get("m", ""),
+                                int(err.get("lag", -1)),
+                                int(err.get("bound", -1)))
+    raise RemoteError(kind, err.get("m", ""))
 
 
 def _wire_queries(queries: Sequence) -> List[list]:
@@ -200,10 +254,11 @@ class ServingClient:
     # ---- map / connection management ----------------------------------------
     def set_map(self, m: ShardMap) -> None:
         """Adopt a newer map; connections to moved addresses are dropped
-        lazily (next use reconnects)."""
+        lazily (next use reconnects).  Shards that left the map entirely
+        lose their lock entries too — without this, every rebalance
+        leaks a dead socket and a lock per removed shard, forever."""
         if m.version <= self.map.version:
             return
-        old = self.map
         self.map = m
         for sid, conn in list(self._conns.items()):
             if sid not in m.shards or m.address_of(sid) != conn.address:
@@ -212,14 +267,24 @@ class ServingClient:
                 # no reader task outlives the client
                 self._orphan_closes.append(
                     asyncio.ensure_future(conn.close()))
-        del old
+        for sid in list(self._conn_locks):
+            if sid not in m.shards:
+                self._conn_locks.pop(sid)
 
     async def _conn(self, shard_id: str) -> _ShardConn:
         # single-flight per shard: concurrent callers racing to connect
         # would each open a socket and orphan all but the last reader task
         lock = self._conn_locks.setdefault(shard_id, asyncio.Lock())
         async with lock:
-            addr = self.map.address_of(shard_id)
+            info = self.map.shards.get(shard_id)
+            if info is None:
+                # the shard left the map (this call raced a rebalance):
+                # surface as wrong_shard so fixed-target rounds re-group
+                # under the new map instead of KeyError-crashing
+                raise WrongShardError(
+                    f"shard {shard_id!r} is not in map "
+                    f"v{self.map.version}")
+            addr = info.address
             conn = self._conns.get(shard_id)
             if conn is not None and conn.alive and conn.address == addr:
                 return conn
@@ -275,6 +340,20 @@ class ServingClient:
             if kind == "queue_full":
                 last = QueueFullError(err.get("m", "shard is shedding load"))
                 continue             # backpressure: backoff within budget
+            if kind == "migrating":
+                # fenced mid-rebalance: nothing was applied (the fence
+                # rejects before parking), so even observes retry safely;
+                # by the time backoff elapses the new map is usually
+                # published and the retry re-routes via wrong_shard
+                last = MigratingError(err.get("m", ""))
+                continue
+            if kind == "unknown_namespace" and idempotent \
+                    and tenant is not None:
+                # release race: the request passed ownership validation
+                # on the source just as the namespace was evicted; the
+                # next attempt re-routes under the healed map
+                last = RemoteError(kind, err.get("m", ""))
+                continue
             raise RemoteError(kind, err.get("m", ""))
         assert last is not None
         raise last
@@ -459,6 +538,21 @@ class ServingClient:
         r = await self._call("digest", {"t": tenant, "w": workflow},
                              tenant=tenant, workflow=workflow)
         return r["sha256"]
+
+    async def predict_base(self, replica: Tuple[str, int],
+                           keys: Sequence[str],
+                           x: Sequence[float]) -> np.ndarray:
+        """First-class replica read: (Q, 3) base predictions off a read
+        replica (replicas are never in the shard map — address them
+        directly).  The staleness bound is enforced replica-side: one
+        whose generation lag exceeds its `max_generation_lag` answers
+        `stale_replica`, surfaced here as `ReplicaStaleError` so the
+        caller redirects the read to the primary (`predict`)."""
+        r = await call_direct(replica, "predict_base",
+                              {"keys": list(keys),
+                               "x": [float(v) for v in x]},
+                              timeout=self.retry.timeout_s)
+        return np.asarray(r["p"])
 
     async def health(self, shard_id: str) -> dict:
         return await self._call("health", {}, shard_id=shard_id)

@@ -82,6 +82,14 @@ class ShardMap:
         return ShardMap(shards.values(), self.version + 1, self.vnodes)
 
     def without_shard(self, shard_id: str) -> "ShardMap":
+        if shard_id not in self.shards:
+            raise KeyError(f"cannot remove unknown shard {shard_id!r}; "
+                           f"known shards: {sorted(self.shards)}")
+        if len(self.shards) == 1:
+            raise ValueError(
+                f"cannot remove {shard_id!r}: it is the last shard, and an "
+                f"empty map cannot route any namespace (decommission by "
+                f"adding a replacement shard first)")
         shards = dict(self.shards)
         del shards[shard_id]
         return ShardMap(shards.values(), self.version + 1, self.vnodes)

@@ -12,6 +12,10 @@ length-prefixed wire protocol:
   predict_matrix  the decision plane's (T, N) row-gather primitive
   observe         fold a completion in; the ack carries the oplog seq
   refresh / checkpoint / digest / health / pull_blocks / update_map
+  fence / unfence / export_namespaces / install_namespaces /
+  release_namespaces — the live-resharding handshake driven by
+  `rebalance.RebalanceCoordinator` (fence writes, drain ingest, ship
+  rows+states, verify digest parity, publish the new map, release)
 
 Ownership is enforced per request: a namespace the shard's own map does
 not place here answers `wrong_shard` carrying that map, so clients with
@@ -116,10 +120,12 @@ class ShardServer:
                  max_pending_ingest: Optional[int] = 4096,
                  refresh_policy: Optional[RefreshPolicy] = None,
                  refresh_interval_s: Optional[float] = None,
+                 bootstrap: Optional[Bootstrap] = None,
                  impl: str = "auto", z: float = 1.96):
         self.shard_id = shard_id
         self.map = shard_map
-        self.host, self.port = host, port
+        self.bootstrap = bootstrap   # namespace spec factory: lets this
+        self.host, self.port = host, port  # shard ADOPT migrated namespaces
         self.store = store if store is not None else PosteriorStore()
         self.oplog = oplog
         self.checkpoint_dir = checkpoint_dir
@@ -148,6 +154,9 @@ class ShardServer:
         self.max_pending_ingest = max_pending_ingest
         self.ingest = IngestStats()  # shard-level drain/flush telemetry
         self.last_ingest_error: Optional[BaseException] = None
+        # namespaces mid-migration: writes answer a retryable
+        # nothing-applied `migrating` error until the handoff completes
+        self.fenced: set = set()
         self._ingest_pending: List[tuple] = []
         self._ingest_task: Optional[asyncio.Task] = None
         self._batch_seqs: Optional[List[int]] = None  # set by hook_many
@@ -230,6 +239,19 @@ class ShardServer:
             raise RpcError("wrong_shard",
                            f"namespace {ns!r} belongs to shard {owner!r}",
                            map=self.map.to_wire())
+
+    def _require_writable(self, tenant: str, workflow: str) -> None:
+        """Ownership + fence check for the write path.  Runs BEFORE any
+        record parks, so — like `wrong_shard` and `queue_full` — a
+        `migrating` reply promises NOTHING of the request was applied:
+        the client may retry the whole batch, and after it heals to the
+        post-rebalance map the retry lands on the new owner."""
+        self._require_owner(tenant, workflow)
+        ns = namespace_str(tenant, workflow)
+        if ns in self.fenced:
+            raise RpcError("migrating",
+                           f"namespace {ns!r} is mid-migration off shard "
+                           f"{self.shard_id!r}; retry (nothing was applied)")
 
     def _binding(self, tenant: str, workflow: str):
         b = self.store.binding(tenant, workflow)
@@ -356,7 +378,7 @@ class ShardServer:
 
     async def _op_observe(self, req) -> dict:
         t, w = req["t"], req["w"]
-        self._require_owner(t, w)
+        self._require_writable(t, w)
         self._binding(t, w)                   # fail fast before parking
         comp = TaskCompletion(**req["c"])
         fut = self._enqueue_observes([(t, w, comp)])[0]
@@ -366,8 +388,8 @@ class ShardServer:
         records = []
         for b in req["b"]:                    # validate the WHOLE batch
             t, w = b["t"], b["w"]             # before anything parks: a
-            self._require_owner(t, w)         # wrong_shard reply promises
-            self._binding(t, w)               # nothing was applied
+            self._require_writable(t, w)      # wrong_shard (or migrating)
+            self._binding(t, w)               # promises nothing applied
             records.append((t, w, TaskCompletion(**b["c"])))
         futs = self._enqueue_observes(records)
         return {"seqs": list(await asyncio.gather(*futs))}
@@ -408,6 +430,11 @@ class ShardServer:
                 "generation": self.store.generation,
                 "seq": self.applied_seq, "pid": os.getpid(),
                 "ingest": self.ingest_stats().as_dict(),
+                # observations parked in the ingest window right now —
+                # the supervisor's backlog signal (a shard whose drain
+                # task died shows this growing without bound)
+                "pending_ingest": len(self._ingest_pending),
+                "fenced": sorted(self.fenced),
                 # non-None iff the LATEST binding-sync publish failed
                 # (rows are due but replicas/readers see a stale store)
                 "last_ingest_error": (
@@ -425,6 +452,105 @@ class ShardServer:
         if m.version > self.map.version:
             self.map = m
         return {"v": self.map.version}
+
+    # ---- live resharding (rebalance.RebalanceCoordinator drives these) ------
+    async def _op_fence(self, req) -> dict:
+        """Fence namespaces for migration: new writes for them answer
+        `migrating` (nothing-applied, retryable) from this point on, then
+        the in-flight ingest window is DRAINED — every observation that
+        was parked (and therefore could already have been, or will be,
+        acked) is folded and oplogged before this op returns.  Predicts
+        keep serving: reads off the source stay correct until the new map
+        is published, because no client can reach the target before then.
+        Returns the post-drain oplog watermark — the migration fence."""
+        self.fenced.update(req["ns"])
+        # every record parked so far (fenced namespaces included) belongs
+        # to the live drain task: parked-nonempty implies a live drain,
+        # and the drain body runs without awaits once its window sleep
+        # ends, so ONE await covers it all.  Records parked during this
+        # await can only be un-fenced namespaces (the fence check runs
+        # before parking) — no loop, no livelock under sustained load.
+        task = self._ingest_task
+        if task is not None and not task.done():
+            try:
+                await task
+            except Exception:        # noqa: BLE001 — per-record futures
+                pass                 # already carry any fold error
+        return {"seq": self.applied_seq,
+                "generation": self.store.generation}
+
+    async def _op_unfence(self, req) -> dict:
+        """Abort path: lift the fence so writes flow to this shard again
+        (the coordinator calls this when verification fails before the
+        new map was published — no client ever saw the target)."""
+        self.fenced.difference_update(req["ns"])
+        return {"fenced": sorted(self.fenced)}
+
+    async def _op_export_namespaces(self, req) -> dict:
+        """Migration payload for fenced namespaces + their pre-handoff
+        digests.  Runs after `fence` drained the ingest window, so the
+        digests cover every acked observation; `install_namespaces` on
+        the target must reproduce them bit-for-bit."""
+        namespaces = list(req["ns"])
+        payload = self.store.export_namespaces(namespaces)
+        digests = {}
+        for ns in namespaces:
+            t, _, w = ns.partition("/")
+            b = self._binding(t, w)
+            digests[ns] = state_digest(b.predictor)
+        return {"s": payload, "digests": digests, "seq": self.applied_seq}
+
+    async def _op_install_namespaces(self, req) -> dict:
+        """Adopt migrated namespaces: merge the shipped rows/states, build
+        fresh predictors from this shard's bootstrap, resume them off the
+        staged states (bit-identical re-attach), hook them into the oplog,
+        and adopt the post-rebalance map so `_require_owner` accepts the
+        rerouted traffic.  Digests are computed HERE, synchronously — no
+        await between install and digest, so no write can interleave and
+        the parity check proves the handoff, not a later state."""
+        if self.bootstrap is None:
+            raise RpcError("no_bootstrap",
+                           f"shard {self.shard_id!r} has no bootstrap and "
+                           f"cannot construct predictors for migrated "
+                           f"namespaces")
+        payload = req["s"]
+        new_map = ShardMap.from_wire(req["map"])
+        wanted = set((payload.get("namespaces") or {}))
+        specs = {namespace_str(t, w): (t, w, spec) for (t, w), spec
+                 in self.bootstrap(self.shard_id, new_map).items()
+                 if namespace_str(t, w) in wanted}
+        missing = sorted(wanted - set(specs))
+        if missing:
+            raise RpcError("no_bootstrap",
+                           f"bootstrap on shard {self.shard_id!r} has no "
+                           f"spec for migrated namespaces {missing}")
+        self.store.import_namespaces(payload)
+        digests = {}
+        for ns, (t, w, spec) in specs.items():
+            predictor, benches = (spec if isinstance(spec, tuple)
+                                  else (spec, None))
+            self.store.resume(t, w, predictor, benches)
+            self.install_oplog_hook(t, w, predictor)
+            digests[ns] = state_digest(predictor)
+        if new_map.version > self.map.version:
+            self.map = new_map
+        return {"digests": digests, "v": self.map.version}
+
+    async def _op_release_namespaces(self, req) -> dict:
+        """Final migration step on the source: drop the namespaces the
+        target now owns (rows, bindings, staged states) and lift their
+        fence.  The coordinator calls this only AFTER the new map was
+        published and digest parity verified."""
+        released = 0
+        for ns in req["ns"]:
+            t, _, w = ns.partition("/")
+            try:
+                self.store.evict(t, w)
+                released += 1
+            except KeyError:
+                pass                 # already gone (idempotent release)
+            self.fenced.discard(ns)
+        return {"released": released}
 
     async def _op_hello(self, req) -> dict:
         return {"shard_id": self.shard_id, "map": self.map.to_wire()}
@@ -558,7 +684,8 @@ def boot_shard(shard_id: str, shard_map: ShardMap, bootstrap: Bootstrap,
 
     oplog = OpLog(oplog_path) if oplog_path is not None else None
     server = ShardServer(shard_id, shard_map, store=store, oplog=oplog,
-                         checkpoint_dir=checkpoint_dir, **server_opts)
+                         checkpoint_dir=checkpoint_dir, bootstrap=bootstrap,
+                         **server_opts)
     server.meta = meta
     server.applied_seq = oplog.last_seq if oplog is not None else 0
     for (t, w), p in preds.items():

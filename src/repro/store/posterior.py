@@ -921,6 +921,64 @@ class PosteriorStore:
                     "blocks": blocks,
                     "namespaces": states}
 
+    # ---- live resharding (namespace migration) ------------------------------
+    def export_namespaces(self, namespaces: Sequence[str]) -> dict:
+        """Serializable migration payload for a set of `tenant/workflow`
+        namespaces: their posterior rows (gathered leaf-stacked off the
+        COW snapshot, so concurrent writers can never tear a row) plus
+        the bound predictors' streaming states.  The resharding sibling
+        of `export_blocks` — that one ships whole blocks to passive
+        replicas; this one slices exactly the rows whose ownership is
+        moving, in a layout `import_namespaces` can merge into a LIVE
+        store whose row allocation differs.
+
+        The caller (the shard's fence protocol) is responsible for
+        quiescing writes first; this method syncs the named bindings so
+        every applied observation is in the exported rows and states."""
+        wanted = set(namespaces)
+        with self._lock:
+            bindings = [b for b in self._bindings.values()
+                        if b.namespace in wanted]
+        for b in bindings:
+            b.sync()
+        with self._lock:
+            prefixes = tuple(ns + SEP for ns in wanted)
+            keys = [k for k in self._rows if k.startswith(prefixes)]
+            snap = self.snapshot()
+            states: Dict[str, Optional[dict]] = {}
+            for ns in wanted:
+                states[ns] = self._saved_states.get(ns)
+            for b in self._bindings.values():
+                if b.namespace in wanted:
+                    exp = getattr(b.predictor, "export_state", None)
+                    states[b.namespace] = exp() if exp is not None else None
+        leaves = (snap.gather(keys) if keys
+                  else {leaf: np.empty((0,) + LEAF_SHAPES[leaf], np.float64)
+                        for leaf in LEAVES})
+        return {"keys": keys, "leaves": leaves,
+                "generation": snap.generation, "namespaces": states}
+
+    def import_namespaces(self, payload: Mapping) -> int:
+        """Merge an `export_namespaces` payload into this store: every
+        shipped row lands via `put_many` (ONE copy-on-write generation,
+        rows allocated in *this* store's layout) and the shipped
+        streaming states are staged so a following `resume()` re-attaches
+        a predictor bit-identically.  Unlike `import_blocks` this is a
+        merge, not a wholesale replace — the store may be live and own
+        other namespaces.  Returns the number of rows installed."""
+        keys = list(payload["keys"])
+        leaves = payload["leaves"]
+        items = []
+        for i, k in enumerate(keys):
+            items.append((k, {leaf: np.asarray(leaves[leaf][i], np.float64)
+                              for leaf in LEAVES}))
+        if items:
+            self.put_many(items)
+        with self._lock:
+            for ns, state in (payload.get("namespaces") or {}).items():
+                self._saved_states[ns] = state
+        return len(items)
+
     def import_blocks(self, payload: Mapping) -> int:
         """Install an `export_blocks` payload into a *passive* replica
         store (refused when live bindings exist — a binding's sync would

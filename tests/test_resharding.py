@@ -1,0 +1,376 @@
+"""Live resharding end-to-end (in-process fleet): add/remove a shard
+with digest parity and zero lost acks, the fence's nothing-applied
+contract, client conn/lock hygiene across `without_shard` maps,
+staleness-bounded replica reads, per-replica ship error isolation, and
+the store's namespace export/import primitive."""
+import asyncio
+import os
+
+import numpy as np
+import pytest
+
+from repro.online import TaskCompletion
+from repro.serve import (MigratingError, RebalanceCoordinator,
+                         ReplicaServer, ReplicaShipper, ReplicaStaleError,
+                         RetryPolicy, ServingClient, ShardInfo, ShardMap,
+                         boot_shard, call_direct, state_digest)
+from repro.serve.wire import read_frame
+from repro.store import PosteriorStore
+from serve_helpers import TENANTS, bootstrap, make_benches, make_predictor
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def _comp(w, i, task="bwa"):
+    return TaskCompletion(w, f"u{i}", task, "local", 1.0 + 0.3 * i,
+                          18.0 + 9.0 * i)
+
+
+async def _boot_fleet(n, tmp, **opts):
+    sids = [f"s{i}" for i in range(n)]
+    m = ShardMap([ShardInfo(s, "127.0.0.1", 0) for s in sids])
+    servers = []
+    opts.setdefault("window_s", 0.001)
+    opts.setdefault("ingest_window_s", 0.001)
+    for sid in sids:
+        srv = boot_shard(
+            sid, m, bootstrap,
+            checkpoint_dir=os.path.join(tmp, sid + "_ckpt"),
+            oplog_path=os.path.join(tmp, sid + ".oplog"), **opts)
+        await srv.start()
+        m = m.with_address(sid, "127.0.0.1", srv.port)
+        servers.append(srv)
+    for srv in servers:
+        srv.map = m
+    return servers, ServingClient(m)
+
+
+async def _close_fleet(servers, client):
+    await client.close()
+    for srv in servers:
+        await srv.aclose()
+
+
+async def _seed_observations(client, n=5):
+    acked = {}
+    for t, w in TENANTS:
+        acked[f"{t}/{w}"] = await client.observe_many(
+            [(_comp(w, i), t, w) for i in range(n)])
+    return acked
+
+
+# --- the protocol: add / remove under a live fleet -----------------------------
+def test_add_shard_migrates_with_digest_parity(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            await _seed_observations(client)
+            old_map = client.map
+            before = {f"{t}/{w}": await client.digest(t, w)
+                      for t, w in TENANTS}
+            preds_before = {
+                (t, w): await client.predict(
+                    [("bwa", None, 2.0), ("idx", "A1", 1.0)], t, w)
+                for t, w in TENANTS}
+
+            # the joining shard boots against the OLD map: it owns (and
+            # binds) nothing until install hands it namespaces
+            s2 = boot_shard("s2", old_map, bootstrap,
+                            checkpoint_dir=os.path.join(
+                                str(tmp_path), "s2_ckpt"),
+                            oplog_path=os.path.join(
+                                str(tmp_path), "s2.oplog"),
+                            window_s=0.001, ingest_window_s=0.001)
+            await s2.start()
+            servers.append(s2)
+            assert s2.store.binding(*TENANTS[0]) is None
+
+            coord = RebalanceCoordinator(client, release_grace_s=0.02)
+            report = await coord.add_shard("s2", "127.0.0.1", s2.port)
+
+            assert report.verified
+            assert client.map.version == old_map.version + 1
+            assert "s2" in client.map.shards
+            new_map = client.map
+            moved = old_map.moved(new_map,
+                                  [f"{t}/{w}" for t, w in TENANTS])
+            assert report.moved == sorted(moved) or \
+                set(report.moved) == set(moved)
+            assert len(moved) >= 1        # 2->3 shards must move something
+            assert all(new_map.shard_for(ns) == "s2" for ns in moved)
+
+            # digest parity through the handoff, for every namespace
+            for t, w in TENANTS:
+                assert await client.digest(t, w) == before[f"{t}/{w}"]
+            # predictions unchanged through the handoff
+            for t, w in TENANTS:
+                np.testing.assert_array_equal(
+                    await client.predict(
+                        [("bwa", None, 2.0), ("idx", "A1", 1.0)], t, w),
+                    preds_before[(t, w)])
+            # sources released the moved namespaces
+            for srv in servers[:2]:
+                for ns in moved:
+                    assert ns not in srv.store.namespaces()
+                assert not srv.fenced
+            # post-rebalance writes land on the new owner and ack
+            t, w = next((t, w) for t, w in TENANTS
+                        if f"{t}/{w}" in moved)
+            seq = await client.observe(_comp(w, 99), t, w)
+            assert seq == s2.applied_seq    # acked by s2's oplog
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_remove_shard_migrates_and_stale_client_heals(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            await _seed_observations(client)
+            old_map = client.map
+            t, w = TENANTS[0]
+            victim = old_map.shard_for(f"{t}/{w}")
+            survivor = next(s for s in old_map.shard_ids() if s != victim)
+            before = {f"{t2}/{w2}": await client.digest(t2, w2)
+                      for t2, w2 in TENANTS}
+
+            coord = RebalanceCoordinator(client, release_grace_s=0.02)
+            report = await coord.remove_shard(victim)
+
+            assert report.verified
+            assert victim not in client.map.shards
+            assert client.map.shard_ids() == [survivor]
+            for t2, w2 in TENANTS:
+                assert await client.digest(t2, w2) == before[f"{t2}/{w2}"]
+            # decommissioned source holds nothing and is unfenced
+            vsrv = next(s for s in servers if s.shard_id == victim)
+            assert not vsrv.fenced
+            assert all(ns.startswith("__shard__")
+                       for ns in vsrv.store.namespaces())
+
+            # a STALE client (pre-rebalance map) routes the moved
+            # namespace to the decommissioned shard, gets wrong_shard
+            # with the NEW map, heals, and must also drop the removed
+            # shard's connection AND lock entries (the leak bugfix)
+            stale = ServingClient(old_map)
+            try:
+                out = await stale.predict([("bwa", None, 1.5)], t, w)
+                assert out.shape == (1, 3)
+                assert stale.map.version == client.map.version
+                assert victim not in stale.map.shards
+                assert victim not in stale._conns
+                assert victim not in stale._conn_locks
+                # writes through the healed client ack on the survivor
+                seq = await stale.observe(_comp(w, 50), t, w)
+                ssrv = next(s for s in servers
+                            if s.shard_id == survivor)
+                assert seq == ssrv.applied_seq
+            finally:
+                await stale.close()
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+# --- the fence: retryable nothing-applied ---------------------------------------
+def test_fenced_observe_is_retryable_nothing_applied(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(1, str(tmp_path))
+        srv = servers[0]
+        try:
+            await _seed_observations(client, n=3)
+            t, w = TENANTS[0]
+            ns = f"{t}/{w}"
+            addr = ("127.0.0.1", srv.port)
+            r = await call_direct(addr, "fence", {"ns": [ns]})
+            seq0 = r["seq"]
+            digest0 = await client.digest(t, w)    # predicts NOT fenced
+
+            fast = ServingClient(client.map, retry=RetryPolicy(
+                max_attempts=2, base_backoff_s=0.005))
+            try:
+                with pytest.raises(MigratingError):
+                    await fast.observe(_comp(w, 7), t, w)
+                # a batch touching the fenced namespace applies NOTHING,
+                # including its records for un-fenced namespaces (whole
+                # batch validates before anything parks)
+                t2, w2 = TENANTS[1]
+                with pytest.raises(MigratingError):
+                    await fast.observe_many(
+                        [(_comp(w, 8), t, w), (_comp(w2, 8), t2, w2)])
+            finally:
+                await fast.close()
+            assert srv.applied_seq == seq0          # oplog untouched
+            assert await client.digest(t, w) == digest0
+            h = await client.health(srv.shard_id)
+            assert h["fenced"] == [ns]
+
+            # unfence (the abort path): writes flow again, seqs dense
+            await call_direct(addr, "unfence", {"ns": [ns]})
+            seq = await client.observe(_comp(w, 9), t, w)
+            assert seq == seq0 + 1
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+def test_fence_drains_parked_ingest_before_replying(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(
+            1, str(tmp_path), ingest_window_s=0.05)
+        srv = servers[0]
+        try:
+            t, w = TENANTS[0]
+            # park observes in the (slow) ingest window, then fence
+            # immediately: the fence must drain them — acked and on the
+            # oplog — before it returns its watermark
+            obs = [asyncio.ensure_future(
+                client.observe(_comp(w, i), t, w)) for i in range(4)]
+            await asyncio.sleep(0.005)      # frames reach the shard,
+            assert srv.applied_seq == 0     # still parked in the window
+            r = await call_direct(("127.0.0.1", srv.port), "fence",
+                                  {"ns": [f"{t}/{w}"]})
+            acked = await asyncio.gather(*obs)
+            assert sorted(acked) == [1, 2, 3, 4]
+            assert r["seq"] == 4            # the fence covers every ack
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+# --- client map hygiene ---------------------------------------------------------
+def test_set_map_evicts_conns_and_locks_of_removed_shards(tmp_path):
+    async def go():
+        servers, client = await _boot_fleet(2, str(tmp_path))
+        try:
+            for sid in client.map.shard_ids():
+                await client.health(sid)     # materialize conn + lock
+            assert set(client._conns) == {"s0", "s1"}
+            assert set(client._conn_locks) == {"s0", "s1"}
+            client.set_map(client.map.without_shard("s1"))
+            assert "s1" not in client._conns
+            assert "s1" not in client._conn_locks
+            assert "s0" in client._conns
+        finally:
+            await _close_fleet(servers, client)
+    _run(go())
+
+
+# --- replica staleness bound ----------------------------------------------------
+def test_replica_read_rejected_beyond_staleness_bound():
+    async def go():
+        K = 2
+        store = PosteriorStore()
+        t, w = TENANTS[0]
+        pred = make_predictor(salt=0)
+        binding = store.bind(t, w, pred, make_benches())
+        replica = await ReplicaServer(max_generation_lag=K).start()
+        try:
+            addr = ("127.0.0.1", replica.port)
+            shipper = ReplicaShipper(store, [addr])
+            await shipper.ship_once()
+            keys = [binding.key_str(task) for task in ("bwa", "idx")]
+            base = await call_direct(addr, "predict_base",
+                                     {"keys": keys, "x": [1.0, 2.0]})
+            assert np.asarray(base["p"]).shape == (2, 3)
+
+            # advance the primary K generations; a mark (ship round whose
+            # transfer failed) tells the replica — lag EXACTLY K serves
+            for i in range(K):
+                pred.observe(_comp(w, 60 + i))
+                binding.sync()
+            await call_direct(addr, "mark", {"g": store.generation})
+            client = ServingClient(ShardMap([ShardInfo("s0", "h", 1)]))
+            out = await client.predict_base(addr, keys, [1.0, 2.0])
+            assert out.shape == (2, 3)
+
+            # one more generation: lag K+1 exceeds the bound -> rejected
+            pred.observe(_comp(w, 70))
+            binding.sync()
+            await call_direct(addr, "mark", {"g": store.generation})
+            with pytest.raises(ReplicaStaleError) as ei:
+                await client.predict_base(addr, keys, [1.0, 2.0])
+            assert ei.value.lag == K + 1 and ei.value.bound == K
+            h = await call_direct(addr, "health", {})
+            assert h["generation_lag"] == K + 1
+            assert h["stale_rejections"] == 1
+
+            # the next successful ship catches the replica up
+            await shipper.ship_once()
+            out = await client.predict_base(addr, keys, [1.0, 2.0])
+            assert out.shape == (2, 3)
+            assert shipper.lags()[addr] == 0
+        finally:
+            await replica.aclose()
+    _run(go())
+
+
+# --- shipper error isolation ----------------------------------------------------
+def test_ship_once_isolates_truncated_frame_replica():
+    async def go():
+        store = PosteriorStore()
+        t, w = TENANTS[0]
+        store.bind(t, w, make_predictor(salt=0), make_benches())
+
+        async def torn_replica(reader, writer):
+            # read the mark, then answer with a frame header announcing
+            # 64 bytes but deliver only 3 and slam the connection
+            await read_frame(reader)
+            writer.write(b"\x00\x00\x00\x40abc")
+            await writer.drain()
+            writer.close()
+
+        bad = await asyncio.start_server(torn_replica, "127.0.0.1", 0)
+        bad_addr = ("127.0.0.1", bad.sockets[0].getsockname()[1])
+        good = await ReplicaServer().start()
+        good_addr = ("127.0.0.1", good.port)
+        try:
+            # the torn replica comes FIRST: before the fix its exception
+            # aborted the whole round and the good replica never shipped
+            shipper = ReplicaShipper(store, [bad_addr, good_addr])
+            results = await shipper.ship_once()
+            assert results[0] == -1             # isolated failure
+            assert results[1] >= 1              # good replica shipped
+            assert shipper.ship_errors == 1
+            assert shipper.shipped[good_addr] == store.generation
+            assert shipper.shipped[bad_addr] == -1   # cursor held for
+            d = await call_direct(good_addr, "digest",   # catch-up
+                                  {"ns": f"{t}/{w}"})
+            assert d["sha256"] == state_digest(
+                store.binding(t, w).predictor)
+        finally:
+            bad.close()
+            await bad.wait_closed()
+            await good.aclose()
+    _run(go())
+
+
+# --- the store primitive --------------------------------------------------------
+def test_export_import_namespaces_roundtrip_into_live_store():
+    src = PosteriorStore()
+    (t0, w0), (t1, w1) = TENANTS[0], TENANTS[1]
+    p0, p1 = make_predictor(salt=0), make_predictor(salt=1)
+    src.bind(t0, w0, p0, make_benches())
+    src.bind(t1, w1, p1, make_benches())
+    for i in range(4):
+        p0.observe(_comp(w0, i))
+    src.sync_bindings()
+
+    payload = src.export_namespaces([f"{t0}/{w0}"])
+    assert all(k.startswith(f"{t0}/{w0}/") for k in payload["keys"])
+    assert list(payload["namespaces"]) == [f"{t0}/{w0}"]
+
+    # the destination is LIVE (owns another namespace already) and has a
+    # different row layout — import must merge, not replace
+    dst = PosteriorStore()
+    other = make_predictor(salt=7)
+    dst.bind("kept", "wf", other, make_benches())
+    n = dst.import_namespaces(payload)
+    assert n == len(payload["keys"])
+    fresh = make_predictor(salt=0)        # bootstrap-fresh, state loaded
+    dst.resume(t0, w0, fresh)             # from the staged export
+    assert state_digest(fresh) == state_digest(p0)
+    assert "kept/wf" in dst.namespaces()  # the live namespace survived

@@ -88,3 +88,107 @@ def test_kill_and_failover_bit_identical(tmp_path):
             finally:
                 await client.close()
     asyncio.run(go())
+
+
+# --- health monitor: classification (no processes) -----------------------------
+def _monitor(policy):
+    from repro.serve import HealthMonitor, ShardInfo
+    m = ShardMap([ShardInfo("s0", "127.0.0.1", 1)])
+    return HealthMonitor(ShardSupervisor(repo_root=_REPO_ROOT), m,
+                         policy=policy)
+
+
+def test_health_classify_dead_process_restarts_immediately():
+    from repro.serve import HealthPolicy
+    mon = _monitor(HealthPolicy())
+    assert mon.classify("s0", alive=False, health=None) == "process exited"
+
+
+def test_health_classify_needs_consecutive_missed_polls():
+    from repro.serve import HealthPolicy
+    mon = _monitor(HealthPolicy(max_missed_polls=3))
+    assert mon.classify("s0", True, None) is None
+    assert mon.classify("s0", True, None) is None
+    # one successful poll resets the streak
+    assert mon.classify("s0", True, {"pending_ingest": 0}) is None
+    assert mon.classify("s0", True, None) is None
+    assert mon.classify("s0", True, None) is None
+    verdict = mon.classify("s0", True, None)
+    assert verdict is not None and "unreachable" in verdict
+
+
+def test_health_classify_persistent_ingest_error_and_backlog():
+    from repro.serve import HealthPolicy
+    mon = _monitor(HealthPolicy(max_error_polls=2, max_backlog_polls=2,
+                                max_pending_ingest=10))
+    bad = {"last_ingest_error": "OSError('disk')", "pending_ingest": 0}
+    ok = {"last_ingest_error": None, "pending_ingest": 0}
+    assert mon.classify("s0", True, bad) is None
+    assert mon.classify("s0", True, ok) is None      # error cleared: reset
+    assert mon.classify("s0", True, bad) is None
+    verdict = mon.classify("s0", True, bad)
+    assert verdict is not None and "ingest error" in verdict
+    # backlog above the threshold for N consecutive polls
+    mon2 = _monitor(HealthPolicy(max_backlog_polls=2, max_pending_ingest=10))
+    deep = {"last_ingest_error": None, "pending_ingest": 500}
+    assert mon2.classify("s0", True, deep) is None
+    verdict = mon2.classify("s0", True, deep)
+    assert verdict is not None and "backlog" in verdict
+
+
+# --- health monitor: end-to-end restart (real processes) -----------------------
+def test_health_monitor_restarts_killed_shard(tmp_path):
+    import signal
+    import time as _time
+
+    from repro.serve import HealthPolicy
+
+    async def go():
+        sids = ["s0", "s1"]
+        m = ShardMap([ShardInfo(s, "127.0.0.1", 0) for s in sids])
+        with ShardSupervisor(repo_root=_REPO_ROOT,
+                             ready_timeout_s=240) as sup:
+            for sid in sids:
+                spec = ShardSpec(sid, BOOTSTRAP,
+                                 os.path.join(str(tmp_path), sid + "_ckpt"),
+                                 os.path.join(str(tmp_path), sid + ".oplog"))
+                port = sup.start(spec, json.dumps(m.to_wire()))
+                m = m.with_address(sid, "127.0.0.1", port)
+            client = ServingClient(m)
+            monitor = None
+            try:
+                await client.update_maps()
+                t, w = TENANTS[0]
+                victim = m.shard_for(f"{t}/{w}")
+                acked = [await client.observe(TaskCompletion(
+                    w, f"u{i}", "bwa", "local", 1.0 + i, 30.0 + i), t, w)
+                    for i in range(3)]
+                digest_before = await client.digest(t, w)
+
+                monitor = sup.watch(m, HealthPolicy(interval_s=0.2,
+                                                    rpc_timeout_s=2.0))
+                # no goodbye: the monitor must NOTICE the death itself
+                sup.procs[victim].send_signal(signal.SIGKILL)
+
+                loop = asyncio.get_running_loop()
+                deadline = _time.monotonic() + 120
+                while monitor.restarts.get(victim, 0) < 1:
+                    if _time.monotonic() > deadline:
+                        raise TimeoutError("monitor never restarted shard")
+                    await asyncio.sleep(0.1)
+                assert monitor.restart_reasons[0] == (victim,
+                                                      "process exited")
+                # the monitor readmitted it with_address: same placement,
+                # new port, map pushed to the fleet
+                m2 = monitor.current_map
+                assert m2.version > m.version
+                assert m2.shard_for(f"{t}/{w}") == victim
+                client.set_map(m2)
+                health = await client.health(victim)
+                assert health["seq"] == acked[-1]       # zero lost acks
+                assert await client.digest(t, w) == digest_before
+            finally:
+                if monitor is not None:
+                    monitor.stop()
+                await client.close()
+    asyncio.run(go())

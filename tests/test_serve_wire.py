@@ -161,6 +161,20 @@ def test_add_remove_shard_moves_about_one_nth():
             assert shrunk.shard_for(ns) == m.shard_for(ns)
 
 
+def test_without_shard_rejects_unknown_id():
+    m = _map(3)
+    with pytest.raises(KeyError, match="unknown shard 'nope'"):
+        m.without_shard("nope")
+
+
+def test_without_shard_refuses_emptying_the_ring():
+    m = _map(3)
+    m = m.without_shard("s2").without_shard("s1")
+    assert m.shard_ids() == ["s0"]           # down to one is fine
+    with pytest.raises(ValueError, match="last shard"):
+        m.without_shard("s0")                # an empty ring routes nothing
+
+
 def test_wire_roundtrip_preserves_placement():
     m = _map(3, version=7)
     m2 = ShardMap.from_wire(m.to_wire())
